@@ -1,0 +1,62 @@
+"""Hybrid-1 vs Hybrid-2 vs Hybrid-3 — the communication-schedule comparison.
+
+The paper's Figures 6-8 compare methods by wall time on a CPU+GPU node; on
+the TPU target the distinguishing quantity is the per-iteration collective
+schedule, which we measure exactly from the lowered shard_map HLO:
+
+  h1: 3 separate scalar psums + full-vector all-gather   (most latency)
+  h2: 1 packed psum + full-vector all-gather             (paper's 3N->N)
+  h3: 1 packed psum + 2x bandwidth-wide halo ppermute    (paper's 2-D)
+
+Runs in a subprocess with 8 virtual devices (the only place a multi-device
+mesh exists on this CPU box).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from functools import partial
+from repro.core import jacobi
+from repro.core.distributed import make_solver_mesh, pipecg_distributed
+from repro.launch.roofline import analyze_hlo
+from repro.sparse import balanced_rows, poisson27, shard_dia, shard_vector, spmv
+
+A = poisson27(12)
+xstar = jnp.ones((A.n,)) / jnp.sqrt(A.n)
+b = spmv(A, xstar)
+M = jacobi(A)
+bounds = balanced_rows(A.n, 8)
+As = shard_dia(A, bounds)
+mesh = make_solver_mesh(8)
+bsh = shard_vector(b, bounds)
+ish = shard_vector(M.inv_diag, bounds)
+
+for method in ("h1", "h2", "h3"):
+    fn = partial(pipecg_distributed, mesh=mesh, method=method, atol=1e-6, maxiter=64)
+    lowered = jax.jit(lambda a, bb, ii: fn(a, bb, ii)).lower(As, bsh, ish)
+    hl = analyze_hlo(lowered.compile().as_text())
+    n_coll = {k: v for k, v in hl.coll_by_kind_count.items()}
+    per_iter = hl.wire_bytes / 64.0
+    print(f"overlap/{method},{per_iter:.1f},counts={n_coll};wire_bytes_64it={hl.wire_bytes:.0f}")
+"""
+
+
+def main():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", _CHILD], capture_output=True, text=True, env=env, timeout=600)
+    if out.returncode != 0:
+        print(f"overlap/FAILED,0,{out.stderr[-300:]!r}")
+        return
+    sys.stdout.write(out.stdout)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Emit the 40-cell roofline table from the dry-run JSON records.
+
+Reads experiments/dryrun/*.json (produced by ``python -m
+repro.launch.dryrun``) and prints one CSV row per cell; also used by
+EXPERIMENTS.md generation. If no records exist it emits a pointer row
+instead of failing (benchmarks stay runnable standalone)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def rows(dirname: str = DRYRUN_DIR):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*_single.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def main():
+    recs = rows()
+    if not recs:
+        emit("roofline/none", 0.0, "run: PYTHONPATH=src python -m repro.launch.dryrun")
+        return
+    for r in recs:
+        cell = f"roofline/{r['arch']}/{r['shape']}"
+        if r.get("status") == "skipped":
+            emit(cell, 0.0, "skipped:" + r.get("reason", "")[:60])
+            continue
+        if r.get("status") != "ok":
+            emit(cell, 0.0, "FAILED")
+            continue
+        t = r["roofline_hlo"]
+        emit(
+            cell,
+            t["bound_s"] * 1e6,
+            f"dom={t['dominant']};compute_ms={t['compute_s']*1e3:.2f};"
+            f"mem_ms={t['memory_s']*1e3:.2f};coll_ms={t['collective_s']*1e3:.2f};"
+            f"ratio6nd={r.get('model_vs_hlo_flops') or 0:.3f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Paper Fig. 6 / Fig. 7 analogue: solver-method comparison per matrix.
+
+Matrices: synthetic analogues of the paper's SuiteSparse Table I (matched
+N and nnz/N; big ones scaled to CPU size) + a 27-pt Poisson. Methods:
+PCG (the paper's Paralution/PETSc baseline algorithm), Chronopoulos-Gear,
+PIPECG (Alg. 2), and PIPECG with the fused Pallas iteration core.
+
+Reported: time per solver ITERATION (us) — the paper's speedups are
+iteration-cost driven since all variants converge in the same #iterations
+(verified in `derived`).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import chronopoulos_cg, jacobi, pcg, pipecg
+from repro.sparse import poisson27, spmv, table1_matrix
+
+from .common import emit, timeit_call
+
+MATRICES = [
+    ("bcsstk15", lambda: table1_matrix("bcsstk15", scale=1.0)),       # N=3948
+    ("gyro", lambda: table1_matrix("gyro", scale=1.0)),               # N=17361
+    ("boneS01@10%", lambda: table1_matrix("boneS01", scale=0.1)),     # N~12.7k
+    ("offshore@10%", lambda: table1_matrix("offshore", scale=0.1)),   # N~26k
+    ("poisson27-20", lambda: poisson27(20)),                          # N=8000
+]
+
+METHODS = {
+    "pcg": lambda A, b, M, it: pcg(A, b, M=M, atol=0.0, maxiter=it),
+    "chrono": lambda A, b, M, it: chronopoulos_cg(A, b, M=M, atol=0.0, maxiter=it),
+    "pipecg": lambda A, b, M, it: pipecg(A, b, M=M, atol=0.0, maxiter=it),
+    "pipecg-fused": lambda A, b, M, it: pipecg(A, b, M=M, atol=0.0, maxiter=it, engine="pallas"),
+}
+
+
+def main(iters_per_solve: int = 40):
+    for mname, gen in MATRICES:
+        A = gen()
+        xstar = jnp.ones((A.n,)) / jnp.sqrt(A.n)
+        b = spmv(A, xstar)
+        M = jacobi(A)
+        # convergence equivalence (the paper's correctness premise)
+        its = {k: int(f(A, b, M, 10000 if False else 2000).iterations)
+               for k, f in (("pcg", lambda A, b, M, it: pcg(A, b, M=M, atol=1e-5, maxiter=it)),
+                            ("pipecg", lambda A, b, M, it: pipecg(A, b, M=M, atol=1e-5, maxiter=it)))}
+        for meth, fn in METHODS.items():
+            us = timeit_call(lambda: fn(A, b, M, iters_per_solve), warmup=1, iters=3)
+            emit(
+                f"solver/{mname}/{meth}",
+                us / iters_per_solve,
+                f"N={A.n};nnz/N={A.nnz()/A.n:.1f};iters_pcg={its['pcg']};iters_pipecg={its['pipecg']}",
+            )
+
+
+if __name__ == "__main__":
+    main()

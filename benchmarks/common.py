@@ -1,0 +1,25 @@
+"""Shared benchmark helpers. Every benchmark prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timeit_call(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time (us) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.block_until_ready(r)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}", flush=True)

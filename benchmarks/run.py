@@ -1,0 +1,50 @@
+"""Benchmark driver: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  bench_convergence     — convergence equivalence (correctness premise)
+  bench_solver_methods  — Fig. 6/7: method comparison across matrices
+  bench_kernels         — §V-B: kernel fusion effect (time + HBM traffic)
+  bench_overlap         — h1/h2/h3 collective schedules (8-dev subprocess)
+  bench_poisson         — Fig. 8: 125-pt Poisson + perf-model decomposition
+  bench_roofline_table  — the 40-cell dry-run roofline (reads experiments/)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (
+        bench_convergence,
+        bench_kernels,
+        bench_overlap,
+        bench_poisson,
+        bench_roofline_table,
+        bench_solver_methods,
+    )
+
+    sections = [
+        ("convergence", bench_convergence.main),
+        ("solver_methods", bench_solver_methods.main),
+        ("kernels", bench_kernels.main),
+        ("overlap", bench_overlap.main),
+        ("poisson", bench_poisson.main),
+        ("roofline_table", bench_roofline_table.main),
+    ]
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in sections:
+        try:
+            fn()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+            print(f"bench/{name}/FAILED,0,", flush=True)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

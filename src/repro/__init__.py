@@ -1,0 +1,9 @@
+"""repro — Pipelined Conjugate Gradient on multi-pod TPU (JAX + Pallas).
+
+Reproduction + beyond-paper optimization of Tiwari & Vadhiyar,
+"Efficient executions of Pipelined Conjugate Gradient Method on
+Heterogeneous Architectures" (2021), re-targeted from CPU+GPU nodes to
+TPU pod meshes. See DESIGN.md for the mapping.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,119 @@
+"""Sharded checkpointing with reshard-on-restore (elastic).
+
+Format: one ``.npz`` holding every leaf keyed by its tree path, plus a JSON
+manifest (step, shapes, dtypes, key order). Writes are atomic
+(tmp dir + rename) so a job killed mid-save never corrupts the latest
+checkpoint — table stakes for 1000-node runs.
+
+Restore takes target *shardings* (not the source mesh): leaves are
+``jax.device_put`` onto whatever mesh the restarted job has — the elastic
+shrink/grow path (save on 512 chips, restore on 256) is the same code.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "available_steps"]
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _flatten_with_names(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(p).strip("[].'\"") for p in path)
+        out[key] = leaf
+    return out
+
+
+def save_checkpoint(ckpt_dir: str, step: int, state: Any) -> str:
+    """Atomically write ``state`` under ckpt_dir/step_<step>."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    leaves = _flatten_with_names(state)
+    host = {k: np.asarray(jax.device_get(v)) for k, v in leaves.items()}
+    manifest = {
+        "step": int(step),
+        "keys": sorted(host),
+        "shapes": {k: list(v.shape) for k, v in host.items()},
+        "dtypes": {k: str(v.dtype) for k, v in host.items()},
+    }
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"), **host)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        final = os.path.join(ckpt_dir, f"step_{step}")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        return final
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+
+
+def available_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        m = _STEP_RE.match(name)
+        if m and os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = available_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, template: Any, shardings: Any = None) -> Any:
+    """Rebuild ``template``-structured state from disk.
+
+    ``shardings`` (optional) mirrors the template tree with
+    jax.sharding.Sharding leaves (or a single sharding applied to all):
+    leaves are device_put accordingly — this is where elastic resharding
+    happens. Without it, arrays land on the default device.
+    """
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+
+    names = _flatten_with_names(template)
+    leaves_t, treedef = jax.tree_util.tree_flatten(template)
+    keys_in_order = list(names.keys())
+    assert len(keys_in_order) == len(leaves_t)
+
+    if shardings is not None and not isinstance(shardings, dict):
+        flat_sh = jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding)
+        )
+        if len(flat_sh) == 1:
+            flat_sh = flat_sh * len(leaves_t)
+    else:
+        flat_sh = [None] * len(leaves_t)
+
+    out_leaves = []
+    for key, tleaf, sh in zip(keys_in_order, leaves_t, flat_sh):
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r} (manifest step {manifest['step']})")
+        arr = data[key]
+        want = tuple(getattr(tleaf, "shape", arr.shape))
+        if tuple(arr.shape) != want:
+            raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} vs template {want}")
+        if sh is not None:
+            out_leaves.append(jax.device_put(arr, sh))
+        else:
+            out_leaves.append(jax.numpy.asarray(arr, dtype=getattr(tleaf, "dtype", arr.dtype)))
+    return jax.tree_util.tree_unflatten(treedef, out_leaves)

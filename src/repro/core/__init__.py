@@ -1,0 +1,39 @@
+"""Core solver library — the paper's contribution as composable JAX modules.
+
+Single-device solvers:
+  pcg             — Algorithm 1 (baseline; 3 blocking reductions/iter)
+  chronopoulos_cg — single merged reduction/iter, not overlapped
+  pipecg          — Algorithm 2 (reduction overlapped with PC+SPMV);
+                    engine="pallas" uses the fused iteration-core kernel
+
+Distributed (shard_map): repro.core.distributed.pipecg_distributed with
+methods "h1"/"h2"/"h3" mirroring the paper's Hybrid-PIPECG-1/2/3.
+"""
+from .chronopoulos import chronopoulos_cg
+from .pcg import dot_f32, pcg
+from .pipecg import pipecg
+from .preconditioners import (
+    BlockJacobiPC,
+    IdentityPC,
+    JacobiPC,
+    apply_pc,
+    block_jacobi,
+    identity,
+    jacobi,
+)
+from .types import SolveResult
+
+__all__ = [
+    "BlockJacobiPC",
+    "IdentityPC",
+    "JacobiPC",
+    "SolveResult",
+    "apply_pc",
+    "block_jacobi",
+    "chronopoulos_cg",
+    "dot_f32",
+    "identity",
+    "jacobi",
+    "pcg",
+    "pipecg",
+]

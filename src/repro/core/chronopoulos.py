@@ -1,0 +1,73 @@
+"""Chronopoulos–Gear CG: one synchronization per iteration.
+
+The stepping stone between PCG (3 reductions) and PIPECG (1 *overlapped*
+reduction): the two recurrence dot products (and the convergence norm) are
+computed back-to-back so they reduce in a single fused synchronization, but
+the result is still consumed in the same iteration — no overlap slack.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..sparse.spmv import spmv
+from .pcg import dot_f32
+from .preconditioners import apply_pc, identity
+from .types import SolveResult
+
+__all__ = ["chronopoulos_cg"]
+
+
+@partial(jax.jit, static_argnames=("maxiter",))
+def _cg_cg_impl(A, b, M, x0, atol, rtol, maxiter: int):
+    dtype = b.dtype
+    r0 = b - spmv(A, x0)
+    u0 = apply_pc(M, r0)
+    w0 = spmv(A, u0)
+    gamma0 = dot_f32(r0, u0)
+    delta0 = dot_f32(w0, u0)
+    norm0 = jnp.sqrt(dot_f32(u0, u0))
+    thresh = jnp.maximum(atol, rtol * norm0)
+    alpha0 = gamma0 / delta0
+
+    hist0 = jnp.full((maxiter + 1,), jnp.nan, dtype=jnp.float32).at[0].set(norm0.astype(jnp.float32))
+    z = jnp.zeros_like(b)
+
+    def cond(state):
+        i, *_, norm, _ = state
+        return (i < maxiter) & (norm > thresh)
+
+    def body(state):
+        i, x, r, u, w, p, s, alpha, beta, gamma, norm, hist = state
+        p = u + beta * p
+        s = w + beta * s
+        x = x + alpha * p
+        r = r - alpha * s
+        u = apply_pc(M, r)
+        w = spmv(A, u)
+        # single synchronization: the three dots reduce together
+        gamma_new = dot_f32(r, u)
+        delta = dot_f32(w, u)
+        norm_new = jnp.sqrt(dot_f32(u, u))
+        beta_new = (gamma_new / gamma).astype(dtype)
+        alpha_new = (gamma_new / (delta - beta_new * gamma_new / alpha)).astype(dtype)
+        hist = hist.at[i + 1].set(norm_new.astype(jnp.float32))
+        return (i + 1, x, r, u, w, p, s, alpha_new, beta_new, gamma_new, norm_new, hist)
+
+    state = (
+        jnp.int32(0), x0, r0, u0, w0, z, z,
+        alpha0.astype(dtype), jnp.zeros((), dtype), gamma0, norm0, hist0,
+    )
+    out = jax.lax.while_loop(cond, body, state)
+    i, x, norm, hist = out[0], out[1], out[-2], out[-1]
+    return SolveResult(x=x, iterations=i, residual_norm=norm, converged=norm <= thresh, history=hist)
+
+
+def chronopoulos_cg(A, b, M=None, x0=None, atol: float = 1e-5, rtol: float = 0.0, maxiter: int = 10000) -> SolveResult:
+    if M is None:
+        M = identity()
+    if x0 is None:
+        x0 = jnp.zeros_like(b)
+    return _cg_cg_impl(A, b, M, x0, jnp.float32(atol), jnp.float32(rtol), maxiter)

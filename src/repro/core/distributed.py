@@ -1,0 +1,250 @@
+"""Distributed PIPECG over a TPU mesh — the paper's three hybrid methods.
+
+The paper's CPU+GPU task/data split is re-targeted to inter-chip
+parallelism (DESIGN.md §2). Rows of the banded operator are partitioned
+across the ``rows`` mesh axis; each method changes *what* is communicated
+per iteration and *what hides it*:
+
+method "h1" (Hybrid-PIPECG-1 analogue)
+    Three separate ``psum`` reductions (gamma, delta, ||u||^2) issued right
+    after the vector updates, plus a full ``all_gather`` of the m vector for
+    the SPMV. Maximum collective count; every collective is dataflow-
+    independent of PC+SPMV, so an async scheduler may overlap them.
+
+method "h2" (Hybrid-PIPECG-2 analogue)
+    The three dot partials are packed into ONE length-3 ``psum`` — the
+    paper's copy-shrinking trick (3N -> N) applied to reduction latency
+    (3 collectives -> 1). SPMV still consumes a full ``all_gather``.
+
+method "h3" (Hybrid-PIPECG-3 analogue)
+    Packed psum + 2-D decomposition: the SPMV splits into a local band part
+    (needs only resident x — the paper's nnz1) and boundary corrections
+    (the paper's nnz2) fed by a ring ``ppermute`` of bandwidth-sized halo
+    slabs. The halo exchange is dataflow-independent of SPMV part 1, which
+    is exactly the overlap the paper engineers with CUDA streams. Supports
+    performance-model (nnz/throughput-weighted) partitions with unequal
+    shard sizes.
+
+All three run inside one ``shard_map``-ped ``lax.while_loop``; convergence
+scalars are replicated via the psums.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..sparse.partition import ShardedDIA
+from .pcg import dot_f32
+from .types import SolveResult
+
+__all__ = ["pipecg_distributed", "make_solver_mesh", "spmv_halo", "spmv_allgather"]
+
+
+def make_solver_mesh(n_shards: int, axis: str = "rows") -> Mesh:
+    """1-D mesh over the first n_shards devices."""
+    devs = np.array(jax.devices()[:n_shards])
+    return Mesh(devs, (axis,))
+
+
+# ---------------------------------------------------------------------------
+# distributed SPMV variants (called inside shard_map)
+# ---------------------------------------------------------------------------
+
+def spmv_allgather(data, x, rows, offsets: Tuple[int, ...], hw: int, axis: str):
+    """Full-vector SPMV: all_gather m, then band-multiply my row block.
+
+    Requires equal shard sizes (rows == R on every shard). This is the
+    h1/h2 communication pattern: N elements over the interconnect per
+    SPMV, like the paper's full-vector PCIe copies.
+    """
+    R = x.shape[0]
+    xfull = jax.lax.all_gather(x, axis)  # (P, R)
+    Pn = xfull.shape[0]
+    flat = xfull.reshape(Pn * R)
+    flat = jnp.concatenate([jnp.zeros((hw,), x.dtype), flat, jnp.zeros((hw,), x.dtype)])
+    p = jax.lax.axis_index(axis)
+    y = jnp.zeros((R,), x.dtype)
+    for j, o in enumerate(offsets):
+        seg = jax.lax.dynamic_slice(flat, (hw + p * R + o,), (R,))
+        y = y + data[j] * seg
+    del rows  # equal shards: validity handled by zero data/x padding
+    return y
+
+
+def spmv_halo(data, x, rows, offsets: Tuple[int, ...], hw: int, axis: str, n_shards: int):
+    """2-D decomposed SPMV: local band (nnz1) + halo corrections (nnz2).
+
+    Only two bandwidth-sized slabs cross the interconnect (ring ppermute);
+    SPMV part 1 has no data dependency on them — the overlap surface.
+    Supports unequal (performance-model) shard sizes via ``rows``.
+    """
+    R = x.shape[0]
+    # --- issue halo exchange (independent of part 1) ---
+    head = x[:hw]  # my first hw valid rows -> left neighbor's right halo
+    tail = jax.lax.dynamic_slice(x, (rows - hw,), (hw,))  # my last hw valid rows
+    right_halo = jax.lax.ppermute(head, axis, [(p, p - 1) for p in range(1, n_shards)])
+    left_halo = jax.lax.ppermute(tail, axis, [(p, p + 1) for p in range(n_shards - 1)])
+
+    # --- SPMV part 1: local columns only (paper's nnz1) ---
+    y = jnp.zeros((R,), x.dtype)
+    for j, o in enumerate(offsets):
+        if o == 0:
+            y = y + data[j] * x
+        elif o > 0:
+            seg = jnp.concatenate([x[o:], jnp.zeros((o,), x.dtype)])
+            y = y + data[j] * seg
+        else:
+            seg = jnp.concatenate([jnp.zeros((-o,), x.dtype), x[:o]])
+            y = y + data[j] * seg
+
+    # --- SPMV part 2: boundary corrections (paper's nnz2) ---
+    for j, o in enumerate(offsets):
+        if o > 0:
+            # rows [rows-o, rows) read the right neighbor's first o entries
+            dslab = jax.lax.dynamic_slice(data[j], (rows - o,), (o,))
+            yslab = jax.lax.dynamic_slice(y, (rows - o,), (o,))
+            y = jax.lax.dynamic_update_slice(y, yslab + dslab * right_halo[:o], (rows - o,))
+        elif o < 0:
+            # rows [0, -o) read the left neighbor's last -o entries
+            y = y.at[: -o].add(data[j][: -o] * left_halo[hw + o :])
+    return y
+
+
+# ---------------------------------------------------------------------------
+# the distributed solver
+# ---------------------------------------------------------------------------
+
+def _local_vma_core(z, q, s, p, x, r, u, w, n, m, inv_diag, alpha, beta):
+    """PIPECG lines 10-21 on the local block (same math as single-device)."""
+    z = n + beta * z
+    q = m + beta * q
+    s = w + beta * s
+    p = u + beta * p
+    x = x + alpha * p
+    r = r - alpha * s
+    u = u - alpha * q
+    w = w - alpha * z
+    m = inv_diag * w
+    g_part = dot_f32(r, u)
+    d_part = dot_f32(w, u)
+    n_part = dot_f32(u, u)
+    return z, q, s, p, x, r, u, w, m, g_part, d_part, n_part
+
+
+def pipecg_distributed(
+    As: ShardedDIA,
+    b_sh: jax.Array,
+    inv_diag_sh: jax.Array,
+    *,
+    mesh: Mesh,
+    axis: str = "rows",
+    method: str = "h3",
+    atol: float = 1e-5,
+    rtol: float = 0.0,
+    maxiter: int = 10000,
+) -> SolveResult:
+    """Distributed PIPECG on row-sharded banded A.
+
+    As          — ShardedDIA from repro.sparse.shard_dia (h3 may use
+                  performance-model/unequal partitions; h1/h2 require equal).
+    b_sh        — (P, R) sharded rhs from shard_vector.
+    inv_diag_sh — (P, R) sharded Jacobi inverse diagonal (use ones for no PC).
+    Returns SolveResult with x of shape (P*R,) padded; use unshard_vector.
+    """
+    if method not in ("h1", "h2", "h3"):
+        raise ValueError(f"method must be h1|h2|h3, got {method}")
+    Pn = As.n_shards
+    R = As.rows_max
+    hw = As.bandwidth
+    offsets = As.offsets
+    sizes = np.diff(np.asarray(As.boundaries))
+    if method in ("h1", "h2") and (sizes != R).any():
+        raise ValueError(f"{method} requires equal shards (use balanced_rows); sizes={sizes}")
+
+    if method == "h3":
+        local_spmv = partial(spmv_halo, offsets=offsets, hw=hw, axis=axis, n_shards=Pn)
+    else:
+        local_spmv = partial(spmv_allgather, offsets=offsets, hw=hw, axis=axis)
+
+    def psum_dots(g, d, nn):
+        if method == "h1":
+            # three separate reductions (paper: three separate async copies)
+            return (
+                jax.lax.psum(g, axis),
+                jax.lax.psum(d, axis),
+                jax.lax.psum(nn, axis),
+            )
+        packed = jax.lax.psum(jnp.stack([g, d, nn]), axis)
+        return packed[0], packed[1], packed[2]
+
+    spec_mat = P(axis, None, None)
+    spec_vec = P(axis, None)
+    spec_scalar = P(axis)
+
+    @partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(spec_mat, spec_scalar, spec_vec, spec_vec),
+        out_specs=(P(axis, None), P(), P(), P(), P()),
+    )
+    def _solve(data_blk, rows_blk, b_blk, inv_blk):
+        data = data_blk[0]  # (k, R)
+        rows = rows_blk[0]
+        b = b_blk[0]  # (R,)
+        inv_diag = inv_blk[0]
+        dtype = b.dtype
+
+        def dist_spmv(v):
+            return local_spmv(data, v, rows)
+
+        # init (Alg 2 lines 1-3), x0 = 0
+        x0 = jnp.zeros_like(b)
+        r0 = b
+        u0 = inv_diag * r0
+        w0 = dist_spmv(u0)
+        g, d, nn = psum_dots(dot_f32(r0, u0), dot_f32(w0, u0), dot_f32(u0, u0))
+        norm0 = jnp.sqrt(nn)
+        m0 = inv_diag * w0
+        n0 = dist_spmv(m0)
+        thresh = jnp.maximum(jnp.float32(atol), jnp.float32(rtol) * norm0)
+        hist0 = jnp.full((maxiter + 1,), jnp.nan, jnp.float32).at[0].set(norm0.astype(jnp.float32))
+        zv = jnp.zeros_like(b)
+
+        def cond(state):
+            return (state[0] < maxiter) & (state[-2] > thresh)
+
+        def body(state):
+            (i, x, r, u, w, z, q, s, p, m, n,
+             gamma, gamma_prev, delta, alpha_prev, norm, hist) = state
+            beta = jnp.where(i > 0, gamma / gamma_prev, 0.0)
+            alpha = jnp.where(i > 0, gamma / (delta - beta * gamma / alpha_prev), gamma / delta)
+            z, q, s, p, x, r, u, w, m, g_p, d_p, n_p = _local_vma_core(
+                z, q, s, p, x, r, u, w, n, m, inv_diag, alpha.astype(dtype), beta.astype(dtype)
+            )
+            # the reduction(s): results consumed next iteration only
+            gamma_new, delta_new, uu = psum_dots(g_p, d_p, n_p)
+            # PC already fused into the VMA core; SPMV is reduction-independent
+            n = dist_spmv(m)
+            norm_new = jnp.sqrt(uu)
+            hist = hist.at[i + 1].set(norm_new.astype(jnp.float32))
+            return (i + 1, x, r, u, w, z, q, s, p, m, n,
+                    gamma_new, gamma, delta_new, alpha, norm_new, hist)
+
+        acc = g.dtype
+        state = (
+            jnp.int32(0), x0, r0, u0, w0, zv, zv, zv, zv, m0, n0,
+            g, jnp.ones((), acc), d, jnp.ones((), acc), norm0, hist0,
+        )
+        out = jax.lax.while_loop(cond, body, state)
+        i, x, norm, hist = out[0], out[1], out[-2], out[-1]
+        return x[None], i, norm, norm <= thresh, hist
+
+    x, iters, norm, conv, hist = _solve(As.data, As.rows_valid, b_sh, inv_diag_sh)
+    return SolveResult(
+        x=x.reshape(Pn, R), iterations=iters, residual_norm=norm, converged=conv, history=hist
+    )

@@ -1,0 +1,28 @@
+"""Shared solver types."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["x", "iterations", "residual_norm", "converged", "history"],
+    meta_fields=[],
+)
+@dataclass(frozen=True)
+class SolveResult:
+    """Result of a CG-family solve.
+
+    ``history`` holds the preconditioned residual norm sqrt((u,u)) per
+    iteration (the paper's convergence criterion), padded with NaN past
+    convergence. Shape (maxiter+1,).
+    """
+
+    x: jax.Array
+    iterations: jax.Array  # int32 scalar
+    residual_norm: jax.Array  # float scalar
+    converged: jax.Array  # bool scalar
+    history: jax.Array  # (maxiter+1,)

@@ -1,0 +1,40 @@
+"""Shared Pallas kernel utilities.
+
+All kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
+validated on CPU with ``interpret=True``, which executes the kernel body in
+Python. ``interpret_default()`` picks the right mode for the current
+backend; tests may force it via ``FORCE_INTERPRET``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LANE = 128        # TPU vector lane width
+SUBLANE = 8       # float32 sublane count; (8, 128) is the native f32 tile
+
+# Test hook: None -> auto (interpret on CPU, compiled on TPU).
+FORCE_INTERPRET: bool | None = None
+
+
+def interpret_default() -> bool:
+    if FORCE_INTERPRET is not None:
+        return FORCE_INTERPRET
+    return jax.default_backend() != "tpu"
+
+
+def ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def pad1d(x: jax.Array, n_pad: int) -> jax.Array:
+    """Zero-pad a 1-D array to length n_pad."""
+    n = x.shape[0]
+    if n == n_pad:
+        return x
+    return jnp.pad(x, (0, n_pad - n))
+
+
+def as_2d(x: jax.Array, lane: int = LANE) -> jax.Array:
+    """(n_pad,) -> (n_pad // lane, lane) view for TPU-native tiling."""
+    return x.reshape(-1, lane)

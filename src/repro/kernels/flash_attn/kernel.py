@@ -1,0 +1,97 @@
+"""Causal flash attention kernel (Pallas TPU).
+
+The single-pass answer to the memory-dominant roofline cells
+(EXPERIMENTS.md §Perf): HLO-level attention — even blocked — materializes
+probability tiles in HBM because XLA loop carries live in HBM; this kernel
+keeps the online-softmax state (m, l) and the output accumulator in VMEM
+scratch across the KV-tile grid steps, so HBM traffic is exactly
+Q + K + V + O (one read each, one write).
+
+Grid: (batch, q_heads, q_tiles, kv_tiles); the kv axis is the innermost
+(sequential) dimension, scratch persists across it, and the output tile is
+written once at the last kv step. GQA is expressed in the k/v BlockSpec
+index maps (head h reads kv-head h // n_rep). Causality skips nothing
+structurally (masked tiles still run) — block-level skipping is a TPU
+grid-pruning option noted in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_Q_TILE = 128
+DEFAULT_KV_TILE = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, kv_tiles, q_tile, kv_tile, sm_scale, causal):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -1e30)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32) * sm_scale  # (q_tile, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)             # (kv_tile, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = q @ k.T  # (q_tile, kv_tile)
+    if causal:
+        q_pos = qi * q_tile + jax.lax.broadcasted_iota(jnp.int32, (q_tile, kv_tile), 0)
+        k_pos = ki * kv_tile + jax.lax.broadcasted_iota(jnp.int32, (q_tile, kv_tile), 1)
+        s = jnp.where(k_pos <= q_pos, s, -1e30)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_prev * corr + p.sum(axis=-1)
+    m_scr[...] = m_new
+    acc_scr[...] = acc_scr[...] * corr[:, None] + p @ v
+
+    @pl.when(ki == kv_tiles - 1)
+    def _finish():
+        o_ref[0, :, 0, :] = (
+            acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+def flash_attention_padded(q, k, v, *, n_rep: int, q_tile: int, kv_tile: int,
+                           causal: bool, interpret: bool):
+    """q (B,Tq,H,hd), k/v (B,Tk,KV,hd); Tq % q_tile == 0, Tk % kv_tile == 0."""
+    B, Tq, H, hd = q.shape
+    Tk = k.shape[1]
+    q_tiles = Tq // q_tile
+    kv_tiles = Tk // kv_tile
+    sm_scale = 1.0 / (hd ** 0.5)
+
+    kern = functools.partial(
+        _kernel, kv_tiles=kv_tiles, q_tile=q_tile, kv_tile=kv_tile,
+        sm_scale=sm_scale, causal=causal,
+    )
+    from jax.experimental.pallas import tpu as pltpu
+
+    fn = pl.pallas_call(
+        kern,
+        grid=(B, H, q_tiles, kv_tiles),
+        in_specs=[
+            pl.BlockSpec((1, q_tile, 1, hd), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, kv_tile, 1, hd), lambda b, h, qi, ki: (b, ki, h // n_rep, 0)),
+            pl.BlockSpec((1, kv_tile, 1, hd), lambda b, h, qi, ki: (b, ki, h // n_rep, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_tile, 1, hd), lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Tq, H, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_tile,), jnp.float32),
+            pltpu.VMEM((q_tile,), jnp.float32),
+            pltpu.VMEM((q_tile, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )
+    return fn(q, k, v)

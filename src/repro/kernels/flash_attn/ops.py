@@ -1,0 +1,37 @@
+"""Public wrapper for the flash attention kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from ..common import interpret_default
+from .kernel import DEFAULT_KV_TILE, DEFAULT_Q_TILE, flash_attention_padded
+
+__all__ = ["flash_attention"]
+
+
+@partial(jax.jit, static_argnames=("causal", "q_tile", "kv_tile", "interpret"))
+def _flash(q, k, v, causal, q_tile, kv_tile, interpret):
+    n_rep = q.shape[2] // k.shape[2]
+    return flash_attention_padded(
+        q, k, v, n_rep=n_rep, q_tile=q_tile, kv_tile=kv_tile, causal=causal, interpret=interpret
+    )
+
+
+def flash_attention(q, k, v, causal: bool = True, q_tile: int | None = None,
+                    kv_tile: int | None = None, interpret: bool | None = None):
+    """Single-pass causal attention. q (B,Tq,H,hd); k/v (B,Tk,KV,hd).
+
+    Tq/Tk must be divisible by the tile sizes (tiles auto-shrink to the
+    sequence length for short inputs).
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    B, Tq, H, hd = q.shape
+    Tk = k.shape[1]
+    qt = min(q_tile or DEFAULT_Q_TILE, Tq)
+    kt = min(kv_tile or DEFAULT_KV_TILE, Tk)
+    if Tq % qt or Tk % kt:
+        raise ValueError(f"Tq={Tq} % {qt} or Tk={Tk} % {kt} != 0")
+    return _flash(q, k, v, causal, qt, kt, interpret)

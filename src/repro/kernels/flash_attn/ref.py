@@ -1,0 +1,23 @@
+"""Oracle for causal flash attention: plain softmax attention.
+
+q (B, Tq, H, hd); k/v (B, Tk, KV, hd); GQA via n_rep = H // KV.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    B, Tq, H, hd = q.shape
+    Tk, KV = k.shape[1], k.shape[2]
+    n_rep = H // KV
+    qg = q.reshape(B, Tq, KV, n_rep, hd)
+    s = jnp.einsum("bqgrh,bkgh->bgrqk", qg, k, preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(hd).astype(jnp.float32)
+    if causal:
+        mask = jnp.arange(Tk)[None, :] <= jnp.arange(Tq)[:, None]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrqk,bkgh->bqgrh", p.astype(q.dtype), v)
+    return o.reshape(B, Tq, H, hd)

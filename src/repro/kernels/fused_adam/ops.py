@@ -1,0 +1,36 @@
+"""Public wrapper: fused AdamW over a flat parameter vector."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..common import LANE, as_2d, ceil_to, interpret_default, pad1d
+from .kernel import TILE_ROWS, fused_adamw_padded
+
+__all__ = ["fused_adamw"]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _adamw(p, g, m, v, lr, b1, b2, eps, wd, step, interpret: bool):
+    n = p.shape[0]
+    n_pad = ceil_to(n, TILE_ROWS * LANE)
+    p2 = as_2d(pad1d(p, n_pad))
+    g2 = as_2d(pad1d(g, n_pad))
+    m2 = as_2d(pad1d(m, n_pad))
+    v2 = as_2d(pad1d(v, n_pad))
+    bc1 = 1.0 - b1**step
+    bc2 = 1.0 - b2**step
+    hyper = jnp.stack([lr, b1, b2, eps, wd, bc1, bc2]).astype(jnp.float32)
+    p_n, m_n, v_n = fused_adamw_padded(hyper, p2, g2, m2, v2, interpret=interpret)
+    flat = lambda a: a.reshape(-1)[:n]
+    return flat(p_n), flat(m_n), flat(v_n)
+
+
+def fused_adamw(p, g, m, v, lr, b1=0.9, b2=0.999, eps=1e-8, wd=0.0, step=1.0, interpret: bool | None = None):
+    """Single-pass AdamW. p/g any float dtype; m/v float32. step is 1-based."""
+    if interpret is None:
+        interpret = interpret_default()
+    args = [jnp.asarray(a, jnp.float32) for a in (lr, b1, b2, eps, wd, step)]
+    return _adamw(p, g, m, v, *args, interpret)

@@ -1,0 +1,16 @@
+"""Oracle for the fused AdamW update (single flat parameter vector)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fused_adamw_ref(p, g, m, v, lr, b1, b2, eps, wd, step):
+    """step is the 1-based step count (float32)."""
+    gf = g.astype(jnp.float32)
+    mf = b1 * m + (1.0 - b1) * gf
+    vf = b2 * v + (1.0 - b2) * gf * gf
+    mhat = mf / (1.0 - b1**step)
+    vhat = vf / (1.0 - b2**step)
+    update = mhat / (jnp.sqrt(vhat) + eps) + wd * p.astype(jnp.float32)
+    p_new = (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+    return p_new, mf, vf

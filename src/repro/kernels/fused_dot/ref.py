@@ -1,0 +1,9 @@
+"""Oracle for the fused triple dot product (PIPECG lines 18-20)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fused_dots_ref(r, u, w):
+    rf, uf, wf = (a.astype(jnp.float32) for a in (r, u, w))
+    return jnp.stack([jnp.sum(rf * uf), jnp.sum(wf * uf), jnp.sum(uf * uf)])

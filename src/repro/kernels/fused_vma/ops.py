@@ -1,0 +1,36 @@
+"""Public wrapper for the fused PIPECG iteration core."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..common import LANE, as_2d, ceil_to, interpret_default, pad1d
+from .kernel import TILE_ROWS, fused_vma_dots_padded
+
+__all__ = ["fused_vma_dots"]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _fused(z, q, s, p, x, r, u, w, n, m, inv_diag, alpha, beta, interpret: bool):
+    n_elems = z.shape[0]
+    n_pad = ceil_to(n_elems, TILE_ROWS * LANE)
+    vecs = tuple(as_2d(pad1d(v, n_pad)) for v in (z, q, s, p, x, r, u, w, n, m))
+    inv2 = as_2d(pad1d(inv_diag, n_pad))
+    outs = fused_vma_dots_padded(vecs, inv2, alpha, beta, interpret=interpret)
+    news = tuple(o.reshape(-1)[:n_elems] for o in outs[:9])
+    dots = outs[9][:, :3].sum(axis=0)
+    return news + (dots,)
+
+
+def fused_vma_dots(z, q, s, p, x, r, u, w, n, m, inv_diag, alpha, beta, interpret: bool | None = None):
+    """Fused 8-VMA + Jacobi-PC + dot-partials pass (PIPECG lines 10-21).
+
+    Returns (z', q', s', p', x', r', u', w', m', dots) where
+    dots = float32 [ (r',u'), (w',u'), (u',u') ].
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    outs = _fused(z, q, s, p, x, r, u, w, n, m, inv_diag, alpha, beta, interpret)
+    return outs

@@ -1,0 +1,4 @@
+from .ops import spmv_bell_pallas
+from .ref import spmv_bell_ref
+
+__all__ = ["spmv_bell_pallas", "spmv_bell_ref"]

@@ -1,0 +1,48 @@
+"""Block-ELLPACK SPMV kernel (general sparsity on TPU).
+
+ELLPACK pads every row to a fixed slot count R, giving a fully regular
+(rows, R) layout — the TPU answer to CSR's ragged rows (DESIGN.md
+§hardware-adaptation). The kernel tiles rows; the source vector x is held
+whole in VMEM (one block) because slot columns may point anywhere. That
+bounds this kernel to n <= ~2M f32 (8 MiB VMEM); larger operators should be
+banded (spmv_dia) or row-partitioned across chips first, which is exactly
+what the distributed solver does.
+
+The gather ``x[cols]`` inside the kernel lowers to TPU dynamic-gather; on
+CPU validation (interpret=True) it is a numpy-style take.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_ROWS = 512
+
+
+def _kernel(cols_ref, vals_ref, x_ref, y_o):
+    x = x_ref[...]
+    gathered = x[cols_ref[...]]  # (tile, R) dynamic gather from VMEM
+    acc = (vals_ref[...].astype(jnp.float32) * gathered.astype(jnp.float32)).sum(axis=1)
+    y_o[...] = acc.astype(y_o.dtype)
+
+
+def spmv_bell_padded(cols, vals, x, *, interpret: bool):
+    n_rows = cols.shape[0]
+    R = cols.shape[1]
+    assert n_rows % TILE_ROWS == 0
+    tiles = n_rows // TILE_ROWS
+    n = x.shape[0]
+    fn = pl.pallas_call(
+        _kernel,
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec((TILE_ROWS, R), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_ROWS, R), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_ROWS,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_rows,), x.dtype),
+        interpret=interpret,
+    )
+    return fn(cols, vals, x)

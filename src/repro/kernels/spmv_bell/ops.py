@@ -1,0 +1,36 @@
+"""Public wrapper for the Block-ELLPACK SPMV kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ...sparse.formats import BellMatrix
+from ..common import ceil_to, interpret_default, pad1d
+from .kernel import TILE_ROWS, spmv_bell_padded
+
+__all__ = ["spmv_bell_pallas"]
+
+_VMEM_ROWS_LIMIT = 2 * 1024 * 1024  # x must fit VMEM
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _spmv(cols, vals, x, interpret: bool):
+    n = x.shape[0]
+    rows_pad = ceil_to(n, TILE_ROWS)
+    cp = jnp.pad(cols, ((0, rows_pad - n), (0, 0)))  # pad rows gather x[0] * 0
+    vp = jnp.pad(vals, ((0, rows_pad - n), (0, 0)))
+    y = spmv_bell_padded(cp, vp, x, interpret=interpret)
+    return y[:n]
+
+
+def spmv_bell_pallas(A: BellMatrix, x: jax.Array, interpret: bool | None = None):
+    if interpret is None:
+        interpret = interpret_default()
+    if A.n > _VMEM_ROWS_LIMIT:
+        raise ValueError(
+            f"spmv_bell keeps x resident in VMEM; n={A.n} exceeds {_VMEM_ROWS_LIMIT}. "
+            "Partition rows across chips (distributed solver) or use spmv_dia."
+        )
+    return _spmv(A.cols, A.vals, x, interpret)

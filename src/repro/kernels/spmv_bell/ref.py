@@ -1,0 +1,9 @@
+"""Oracle for Block-ELLPACK SPMV: y[i] = sum_r vals[i,r] * x[cols[i,r]]."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spmv_bell_ref(cols: jax.Array, vals: jax.Array, x: jax.Array) -> jax.Array:
+    return (vals.astype(jnp.float32) * x[cols].astype(jnp.float32)).sum(axis=1).astype(x.dtype)

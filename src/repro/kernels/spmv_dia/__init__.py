@@ -1,0 +1,4 @@
+from .ops import spmv_dia_pallas
+from .ref import spmv_dia_ref
+
+__all__ = ["spmv_dia_pallas", "spmv_dia_ref"]

@@ -1,0 +1,58 @@
+"""Banded (DIA) SPMV kernel — the paper's SPMV hot spot, TPU-adapted.
+
+GPU SPMV in the paper is cuSPARSE CSR. CSR's ragged rows are hostile to the
+TPU vector unit, so the TPU-native banded form is used instead: each stencil
+diagonal is a dense vector and SPMV is a sum of statically-shifted
+elementwise multiplies (pure VPU work, no gathers — this is the
+hardware-adaptation noted in DESIGN.md).
+
+Tiling: the grid walks y in 1-D tiles of TILE elements. The x operand is
+passed three times with neighbor index maps (left / center / right block),
+so every static shift within ``bandwidth <= TILE`` reads from the
+concatenated 3-tile window held in VMEM. Diagonal data blocks are (n_diags,
+TILE) VMEM tiles.
+
+Boundary correctness relies on the DIA convention that ``data[j, i] = 0``
+whenever column ``i + off[j]`` falls outside [0, n) — clamped neighbor
+blocks at the edges are multiplied by those zeros.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(offsets, tile, dat_ref, xl_ref, xc_ref, xr_ref, y_o):
+    xwin = jnp.concatenate([xl_ref[...], xc_ref[...], xr_ref[...]])
+    acc = jnp.zeros((tile,), jnp.float32)
+    for j, o in enumerate(offsets):
+        seg = jax.lax.dynamic_slice(xwin, (tile + o,), (tile,))
+        acc = acc + dat_ref[j, :].astype(jnp.float32) * seg.astype(jnp.float32)
+    y_o[...] = acc.astype(y_o.dtype)
+
+
+def spmv_dia_padded(data, offsets: tuple[int, ...], x, *, tile: int, interpret: bool):
+    """data (k, n_pad), x (n_pad,) with n_pad % tile == 0; bandwidth <= tile."""
+    n_pad = x.shape[0]
+    assert n_pad % tile == 0
+    tiles = n_pad // tile
+    last = tiles - 1
+
+    kern = partial(_kernel, offsets, tile)
+    fn = pl.pallas_call(
+        kern,
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec((len(offsets), tile), lambda i: (0, i)),
+            pl.BlockSpec((tile,), lambda i: (jnp.maximum(i - 1, 0),)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (jnp.minimum(i + 1, last),)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), x.dtype),
+        interpret=interpret,
+    )
+    return fn(data, x, x, x)

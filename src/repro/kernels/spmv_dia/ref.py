@@ -1,0 +1,19 @@
+"""Oracle for banded (DIA) SPMV: y[i] = sum_j data[j,i] * x[i+off[j]]."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spmv_dia_ref(data: jax.Array, offsets: tuple[int, ...], x: jax.Array) -> jax.Array:
+    n = x.shape[0]
+    y = jnp.zeros_like(x)
+    for j, o in enumerate(offsets):
+        if o == 0:
+            xs = x
+        elif o > 0:
+            xs = jnp.concatenate([x[o:], jnp.zeros((o,), x.dtype)])
+        else:
+            xs = jnp.concatenate([jnp.zeros((-o,), x.dtype), x[:o]])
+        y = y + data[j] * xs
+    return y

@@ -1,0 +1,4 @@
+"""Launch layer: production meshes, sharding rules, dry-run, rooflines."""
+from .mesh import make_production_mesh, make_solver_mesh_from
+
+__all__ = ["make_production_mesh", "make_solver_mesh_from"]

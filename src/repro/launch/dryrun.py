@@ -1,0 +1,265 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e + g).
+
+For every (architecture x input shape) cell this lowers AND compiles the
+real step program — ``train_step`` for train shapes, ``prefill`` for
+prefill shapes, ``serve_step`` (one-token decode against a seq_len cache)
+for decode shapes — on the production meshes:
+
+    single-pod : 16 x 16        ("data", "model")      = 256 chips
+    multi-pod  : 2 x 16 x 16    ("pod", "data", "model") = 512 chips
+
+and extracts the roofline inputs: cost_analysis, memory_analysis, and the
+collective census of the SPMD HLO. Scan-body undercounting is corrected by
+a 2-point layer-count fit (see launch/roofline.py). Results land as JSON
+under --out for EXPERIMENTS.md.
+
+The XLA_FLAGS line above MUST run before any jax import — jax locks the
+device count at first init. Everything else imports lazily below it.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import SHAPES, get_config, list_configs
+from ..configs.base import ArchConfig, ShapeConfig
+from ..models import build_model
+from ..models.common import use_sharding_rules
+from ..train import AdamWConfig, TrainConfig, abstract_train_state, make_train_step
+from ..train.train_step import TrainState
+from ..train.optimizer import AdamWState
+from .analytic import analytic_flops, analytic_hbm_bytes, model_flops_simple, param_count
+from .mesh import make_production_mesh
+from .roofline import HW, analyze_hlo, roofline_terms
+from .sharding import (
+    DEFAULT_RULES,
+    batch_shardings,
+    cache_shardings,
+    make_resolver,
+    param_shardings,
+    scalar_sharding,
+)
+
+__all__ = ["run_cell", "main"]
+
+
+def _group_size(cfg: ArchConfig) -> int:
+    if cfg.family == "ssm":
+        return cfg.slstm_every
+    if cfg.family == "hybrid":
+        return cfg.attn_every
+    if cfg.family == "vlm":
+        return cfg.cross_attn_every
+    return 1
+
+
+def _with_groups(cfg: ArchConfig, groups: int) -> ArchConfig:
+    g = _group_size(cfg)
+    new = {"n_layers": groups * g}
+    if cfg.family == "encdec":
+        new["n_enc_layers"] = groups
+    return replace(cfg, **new)
+
+
+def _lower_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, rules, variant: dict | None = None):
+    """Lower the appropriate step program; returns (lowered, meta).
+
+    variant (perf-iteration knobs, EXPERIMENTS.md §Perf):
+      remat: True | "save_collectives"
+      cache_layout: "default" | "seq_model"
+      pipelined_clip: bool
+    """
+    variant = variant or {}
+    api = build_model(cfg)
+    resolver = make_resolver(mesh, rules)
+    p_sh = param_shardings(api, mesh, rules)
+    specs = api.input_specs(shape)
+
+    if shape.kind == "train":
+        tc = TrainConfig(
+            optimizer=AdamWConfig(
+                lr=1e-4, clip_norm=1.0, pipelined_clip=variant.get("pipelined_clip", False)
+            ),
+            remat=variant.get("remat", True),
+        )
+        step = make_train_step(api, tc)
+        state_sds = abstract_train_state(api)
+        sc = scalar_sharding(mesh)
+        state_sh = TrainState(
+            params=p_sh,
+            opt=AdamWState(m=p_sh, v=p_sh, step=sc, prev_norm=sc),
+            step=sc,
+        )
+        b_sh = batch_shardings(specs, mesh, rules)
+        with mesh, use_sharding_rules(resolver, mesh if variant.get("moe_shard_map") else None):
+            lowered = jax.jit(
+                step, in_shardings=(state_sh, b_sh), donate_argnums=(0,)
+            ).lower(state_sds, specs)
+        return lowered, {"program": "train_step"}
+
+    if shape.kind == "prefill":
+        params_sds = api.abstract_params()
+        b_sh = batch_shardings(specs, mesh, rules)
+        with mesh, use_sharding_rules(resolver, mesh if variant.get("moe_shard_map") else None):
+            lowered = jax.jit(api.prefill, in_shardings=(p_sh, b_sh)).lower(params_sds, specs)
+        return lowered, {"program": "prefill"}
+
+    # decode
+    params_sds = api.abstract_params()
+    cache_sds = specs["cache"]
+    c_sh = cache_shardings(cache_sds, shape, mesh, rules, layout=variant.get("cache_layout", "default"))
+    tok_sh = batch_shardings({"token": specs["token"]}, mesh, rules)["token"]
+
+    def serve_step(params, token, cache, pos):
+        return api.decode(params, token, cache, pos)
+
+    with mesh, use_sharding_rules(resolver, mesh if variant.get("moe_shard_map") else None):
+        lowered = jax.jit(
+            serve_step,
+            in_shardings=(p_sh, tok_sh, c_sh, scalar_sharding(mesh)),
+            donate_argnums=(2,),
+        ).lower(params_sds, specs["token"], cache_sds, jnp.int32(shape.seq_len - 1))
+    return lowered, {"program": "serve_step"}
+
+
+def _cost(compiled) -> dict:
+    ca = compiled.cost_analysis() or {}
+    return {"flops": float(ca.get("flops", 0.0)), "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *, fit: bool = True, verbose: bool = True,
+             variant: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    variant = variant or {}
+    if variant.get("attn_chunk"):
+        cfg = replace(cfg, attn_chunk=int(variant["attn_chunk"]))
+    rec: dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok",
+        "variant": variant,
+    }
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        rec["status"] = "skipped"
+        rec["reason"] = "full quadratic attention at 524288 — skipped by design (DESIGN.md §4)"
+        return rec
+
+    n_chips = 512 if multi_pod else 256
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = DEFAULT_RULES()
+    t0 = time.time()
+    lowered, meta = _lower_cell(cfg, shape, mesh, rules, variant)
+    rec.update(meta)
+    rec["lower_s"] = round(time.time() - t0, 2)
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 2)
+
+    ma = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes_per_device": int(ma.argument_size_in_bytes),
+        "output_bytes_per_device": int(ma.output_size_in_bytes),
+        "temp_bytes_per_device": int(ma.temp_size_in_bytes),
+        "alias_bytes_per_device": int(ma.alias_size_in_bytes),
+        "peak_bytes_per_device": int(getattr(ma, "peak_memory_in_bytes", 0)),
+    }
+    raw = _cost(compiled)
+    rec["hlo_raw_cost_analysis"] = raw  # scan bodies counted once — reference only
+
+    hl = analyze_hlo(compiled.as_text())
+    rec["hlo"] = {
+        "flops_per_chip": hl.flops,
+        "hbm_bytes_per_chip": hl.hbm_bytes,
+        "wire_bytes_per_chip": hl.wire_bytes,
+        "n_whiles": hl.n_whiles,
+    }
+    rec["collectives"] = {
+        "wire_bytes_per_chip": hl.wire_bytes,
+        "by_kind_bytes": hl.coll_by_kind_bytes,
+        "by_kind_count": hl.coll_by_kind_count,
+    }
+    rec["sharding_fallbacks"] = [
+        {"shape": list(s), "axis": a, "why": w} for (s, a, w) in rules.dropped[:20]
+    ]
+    flops_pc = hl.flops
+    bytes_pc = hl.hbm_bytes
+
+    # --- analytic reference (global) ---
+    rec["analytic"] = {
+        "model_flops_6nd": model_flops_simple(cfg, shape),
+        "detailed_flops": analytic_flops(cfg, shape),
+        "hbm_bytes": analytic_hbm_bytes(cfg, shape),
+        "params": param_count(cfg),
+    }
+
+    # --- roofline terms (per chip) ---
+    terms = roofline_terms(flops_pc, bytes_pc, hl.wire_bytes)
+    rec["roofline_hlo"] = terms
+    an = rec["analytic"]
+    terms_an = roofline_terms(
+        an["detailed_flops"] / n_chips, an["hbm_bytes"] / n_chips, hl.wire_bytes
+    )
+    rec["roofline_analytic"] = terms_an
+    rec["model_vs_hlo_flops"] = (
+        an["model_flops_6nd"] / (flops_pc * n_chips) if flops_pc else None
+    )
+    if verbose:
+        print(
+            f"[{rec['mesh']}] {arch:24s} {shape_name:12s} {rec['program']:10s} "
+            f"compile={rec['compile_s']:6.1f}s peak/dev={rec['memory']['peak_bytes_per_device']/2**30:7.2f}GiB "
+            f"dom={terms_an['dominant']:10s} bound={terms_an['bound_s']*1e3:9.3f}ms",
+            flush=True,
+        )
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--no-fit", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = list_configs() if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}_{shape}_{'multi' if mp else 'single'}"
+                try:
+                    rec = run_cell(arch, shape, mp, fit=(not args.no_fit) and not mp)
+                except Exception as e:  # a failure here is a bug in the system
+                    rec = {
+                        "arch": arch, "shape": shape,
+                        "mesh": "2x16x16" if mp else "16x16",
+                        "status": "FAILED", "error": f"{type(e).__name__}: {e}",
+                        "trace": traceback.format_exc()[-2000:],
+                    }
+                    failures.append(tag)
+                    print(f"FAILED {tag}: {e}", flush=True)
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(rec, f, indent=1, default=float)
+    print(f"\ndone; {len(failures)} failures: {failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,285 @@
+"""Roofline extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds:
+
+    compute    = FLOPs / (chips * 197e12 bf16 FLOP/s)
+    memory     = HBM bytes / (chips * 819e9 B/s)
+    collective = wire bytes / (chips * 50e9 B/s per ICI link)
+
+Methodology (and why ``compiled.cost_analysis()`` alone is not enough):
+XLA's cost analysis counts ``lax.scan``/while bodies ONCE (verified: an
+L-layer scanned stack reports exactly 1/L of the unrolled flops). Every
+model here scans its layers, so we analyze the SPMD HLO text directly:
+
+* the module is split into computations; while-loop trip counts are read
+  from the literal bound in each loop condition; every computation gets a
+  multiplier = product of enclosing trip counts;
+* FLOPs: every ``dot`` instruction contributes 2 * |result| * contraction
+  (operand shapes resolved within its computation) * multiplier. Elementwise
+  flops are ignored — matmuls dominate all ten architectures;
+* HBM bytes: every top-level instruction contributes |result| + sum
+  |operands| (fusion internals excluded — post-fusion boundaries are what
+  actually touches HBM) * multiplier. This is an ideal-fusion traffic
+  model: the TPU figure assuming VMEM-resident fusion intermediates;
+* collectives: wire bytes per chip with ring factors per kind; the HLO is
+  the per-device SPMD module so shapes are already per-chip. NOTE: on this
+  CPU backend XLA promotes bf16 all-reduces to f32 (``*_promoted`` reducers)
+  — real-TPU wire bytes for those are half; reported as-is and called out
+  in EXPERIMENTS.md.
+
+``cost_analysis()`` raw numbers are also recorded for reference, and
+launch/analytic.py provides the closed-form cross-check.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HW", "HloAnalysis", "analyze_hlo", "roofline_terms"]
+
+HW = {
+    "peak_flops": 197e12,  # bf16 FLOP/s per chip
+    "hbm_bw": 819e9,       # B/s per chip
+    "ici_bw": 50e9,        # B/s per link
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(
+    r"(bf16|f64|f32|f16|f8e4m3fn|f8e5m2|s64|s32|s16|s8|u64|u32|u16|u8|pred|c64|c128)\[([\d,]*)\]"
+)
+_COMP_START = re.compile(r"^(ENTRY\s+)?%?([\w.\-_]+)\s+\(.*\)\s*->")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-_]+)\s*=\s*(.+)$")
+_ATTR_RE = re.compile(r"(condition|body)=%?([\w.\-_]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_OLD_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_OPERAND_RE = re.compile(r"%([\w.\-_]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_FREE_OPS = (
+    "parameter(", "constant(", "tuple(", "get-tuple-element(", "bitcast(",
+    "after-all(", "iota(",
+)
+
+
+def _shapes_of(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _bytes_of(text: str) -> int:
+    total = 0
+    for dt, dims in _shapes_of(text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class HloAnalysis:
+    flops: float = 0.0                 # per-chip, trip-adjusted (dots only)
+    hbm_bytes: float = 0.0             # per-chip, trip-adjusted, ideal fusion
+    wire_bytes: float = 0.0            # per-chip collective wire traffic
+    coll_by_kind_bytes: Dict[str, float] = field(default_factory=dict)
+    coll_by_kind_count: Dict[str, int] = field(default_factory=dict)
+    n_whiles: int = 0
+    notes: List[str] = field(default_factory=list)
+    bytes_by_op: Dict[str, float] = field(default_factory=dict)  # HBM bytes per op kind
+
+    def _tally(self, body: str, amount: float):
+        op = body.split("(", 1)[0].split()[-1] if "(" in body else body[:16]
+        self.bytes_by_op[op] = self.bytes_by_op.get(op, 0.0) + amount
+        self.hbm_bytes += amount
+
+    def add_coll(self, kind: str, result_bytes: int, group: int, mult: float):
+        if kind == "all-reduce":
+            wire = 2.0 * result_bytes * (group - 1) / max(group, 1)
+        elif kind == "all-gather":
+            wire = result_bytes * (group - 1) / max(group, 1)
+        elif kind == "reduce-scatter":
+            wire = float(result_bytes) * (group - 1)
+        elif kind == "all-to-all":
+            wire = result_bytes * (group - 1) / max(group, 1)
+        else:  # collective-permute
+            wire = float(result_bytes)
+        self.coll_by_kind_bytes[kind] = self.coll_by_kind_bytes.get(kind, 0.0) + wire * mult
+        self.coll_by_kind_count[kind] = self.coll_by_kind_count.get(kind, 0) + 1
+        self.wire_bytes += wire * mult
+
+
+def _split_computations(hlo: str) -> Tuple[Dict[str, List[str]], Optional[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    entry = None
+    for line in hlo.splitlines():
+        if cur is None:
+            if "->" in line and "{" in line:
+                m = _COMP_START.match(line.strip())
+                if m:
+                    cur = m.group(2)
+                    comps[cur] = []
+                    if m.group(1):
+                        entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        comps[cur].append(line)
+    return comps, entry
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    best = 1
+    for ln in cond_lines:
+        for c in _CONST_RE.findall(ln):
+            best = max(best, int(c))
+    return best
+
+
+def analyze_hlo(hlo: str) -> HloAnalysis:
+    comps, entry = _split_computations(hlo)
+    out = HloAnalysis()
+    if entry is None:
+        out.notes.append("no ENTRY computation found")
+        return out
+
+    # walk entry + while bodies only; fusion sub-computations are *not*
+    # walked for flops/bytes (their boundaries are counted at call sites)
+    work: List[Tuple[str, float]] = [(entry, 1.0)]
+    seen: Dict[str, float] = {}
+    while work:
+        name, mult = work.pop()
+        if name not in comps or seen.get(name, -1.0) >= mult:
+            continue
+        seen[name] = mult
+        shape_map: Dict[str, int] = {}
+        dims_map: Dict[str, List[int]] = {}
+        for ln in comps[name]:
+            m = _DEF_RE.match(ln)
+            if not m:
+                continue
+            lhs_name, rhs = m.group(1), m.group(2)
+            # split "<type> <op>(...)" — the type may itself be a
+            # parenthesized tuple "(f32[..], bf16[..])"
+            if rhs.startswith("("):
+                depth = 0
+                end = 0
+                for i, ch in enumerate(rhs):
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                        if depth == 0:
+                            end = i
+                            break
+                type_str = rhs[: end + 1]
+                body = rhs[end + 2 :]
+            else:
+                type_end = rhs.find(" ")
+                type_str = rhs[:type_end] if type_end > 0 else rhs
+                body = rhs[type_end + 1 :] if type_end > 0 else ""
+            shape_map[lhs_name] = _bytes_of(type_str)
+            sh = _shapes_of(type_str)
+            if len(sh) == 1:
+                dims_map[lhs_name] = sh[0][1]
+            if any(body.startswith(f) or f" {f}" in body.split(",")[0] for f in _FREE_OPS):
+                continue
+
+            if " while(" in body or body.startswith("while("):
+                out.n_whiles += 1
+                attrs = dict(_ATTR_RE.findall(body))
+                trips = _trip_count(comps.get(attrs.get("condition", ""), []))
+                for sub in ("body", "condition"):
+                    if attrs.get(sub):
+                        work.append((attrs[sub], mult * trips))
+                continue
+
+            # collectives
+            matched_coll = False
+            for kind in _COLL_KINDS:
+                if f"{kind}(" in body and f"{kind}-done" not in body:
+                    rb = _bytes_of(type_str)
+                    gm = _GROUPS_RE.search(body)
+                    if gm:
+                        group = int(gm.group(2))
+                    else:
+                        gm2 = _GROUPS_OLD_RE.search(body)
+                        group = len(gm2.group(1).split(",")) if gm2 else 2
+                    out.add_coll(kind, rb, group, mult)
+                    matched_coll = True
+                    break
+
+            # operand list = first (...) group after the op name
+            p0 = body.find("(")
+            p1 = body.find(")", p0)
+            operands = _OPERAND_RE.findall(body[p0 + 1 : p1]) if p0 >= 0 and p1 > p0 else []
+            res_bytes = _bytes_of(type_str)
+
+            if not matched_coll:
+                # in-place / windowed ops: charge the moved window, not the
+                # aliased full buffer (XLA updates loop-carried stacks in place)
+                if "dynamic-update-slice(" in body:
+                    upd = shape_map.get(operands[1], 0) if len(operands) > 1 else 0
+                    out._tally(body, 2.0 * upd * mult)
+                elif "dynamic-slice(" in body or " gather(" in body or body.startswith("gather("):
+                    out._tally(body, 2.0 * res_bytes * mult)
+                elif ("dynamic-update-slice" in lhs_name or "dynamic_update_slice" in lhs_name
+                      or " scatter(" in body or body.startswith("scatter(")):
+                    # fused DUS/scatter: charge operands smaller than the result
+                    small = sum(
+                        b for b in (shape_map.get(o, 0) for o in operands) if b < res_bytes
+                    )
+                    out._tally(body, 2.0 * small * mult)
+                else:
+                    op_bytes = sum(shape_map.get(o, 0) for o in operands)
+                    # fusions that internally dynamic-slice a loop-invariant
+                    # stack (scan-sliced weights/caches) only read the slice,
+                    # not the whole operand they reference
+                    cm = re.search(r"calls=%?([\w.\-_]+)", body)
+                    if cm and op_bytes > 4 * res_bytes:
+                        callee = comps.get(cm.group(1), [])
+                        if any("dynamic-slice(" in c for c in callee):
+                            op_bytes = min(op_bytes, 2 * res_bytes)
+                    out._tally(body, (res_bytes + op_bytes) * mult)
+
+            # dot flops
+            if " dot(" in body or body.startswith("dot("):
+                res_elems = 1
+                for _, dims in _shapes_of(type_str):
+                    e = 1
+                    for d in dims:
+                        e *= d
+                    res_elems *= max(e, 1)
+                cm = _CONTRACT_RE.search(body)
+                contract = 1
+                if cm and operands:
+                    lhs_dims = dims_map.get(operands[0], [])
+                    for idx in (int(i) for i in cm.group(1).split(",") if i):
+                        if idx < len(lhs_dims):
+                            contract *= lhs_dims[idx]
+                out.flops += 2.0 * res_elems * contract * mult
+
+    return out
+
+
+def roofline_terms(flops_per_chip: float, hbm_bytes_per_chip: float, wire_bytes_per_chip: float) -> Dict[str, float]:
+    compute = flops_per_chip / HW["peak_flops"]
+    memory = hbm_bytes_per_chip / HW["hbm_bw"]
+    collective = wire_bytes_per_chip / HW["ici_bw"]
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom.replace("_s", "")
+    terms["bound_s"] = max(compute, memory, collective)
+    return terms

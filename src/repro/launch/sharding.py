@@ -1,0 +1,172 @@
+"""Logical-axis sharding rules with divisibility-aware degradation.
+
+Rules map logical axis names (from models/common.ParamSpec and the
+shard_hint call sites) to mesh axes. JAX requires every explicitly sharded
+input dim to divide the mesh axis product, so ``resolve_spec`` drops any
+rule whose dim doesn't divide — the arch still compiles, just with that
+tensor replicated along the dropped axis (recorded so the dry-run can
+report degradations, e.g. qwen2.5's kv_flat=1024 on a 16-way model axis is
+fine, but whisper's 6-head q projection of 384 falls back).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["Rules", "DEFAULT_RULES", "resolve_spec", "make_resolver", "param_shardings",
+           "batch_shardings", "cache_shardings", "scalar_sharding"]
+
+MeshAxes = Union[str, Tuple[str, ...], None]
+
+
+@dataclass
+class Rules:
+    table: Dict[str, MeshAxes]
+    dropped: list = field(default_factory=list)  # (shape, axis, reason) log
+
+    def get(self, name: Optional[str]) -> MeshAxes:
+        if name is None:
+            return None
+        return self.table.get(name)
+
+
+def DEFAULT_RULES() -> Rules:
+    return Rules(
+        table={
+            "batch": ("pod", "data"),
+            "vocab": "model",
+            "heads_flat": "model",
+            "kv_flat": "model",
+            "heads": "model",
+            "mlp": "model",
+            "experts": "model",
+            "expert_mlp": None,
+            "embed": None,
+            "layers": None,
+            "seq": None,
+        }
+    )
+
+
+def _present_axes(mesh: Mesh, axes: MeshAxes) -> Tuple[str, ...]:
+    if axes is None:
+        return ()
+    if isinstance(axes, str):
+        axes = (axes,)
+    return tuple(a for a in axes if a in mesh.shape)
+
+
+def resolve_spec(shape: Sequence[int], logical: Sequence[Optional[str]], mesh: Mesh,
+                 rules: Rules) -> P:
+    """Build a PartitionSpec, dropping non-dividing / duplicate mesh axes."""
+    used: set = set()
+    parts = []
+    for dim, name in zip(shape, logical):
+        axes = _present_axes(mesh, rules.get(name))
+        axes = tuple(a for a in axes if a not in used)
+        if not axes:
+            parts.append(None)
+            continue
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        if dim % size != 0:
+            # try a prefix of the axes before giving up
+            ok = ()
+            for k in range(len(axes) - 1, 0, -1):
+                size_k = int(np.prod([mesh.shape[a] for a in axes[:k]]))
+                if dim % size_k == 0:
+                    ok = axes[:k]
+                    break
+            if not ok:
+                rules.dropped.append((tuple(shape), name, f"{dim} % {size} != 0"))
+                parts.append(None)
+                continue
+            axes = ok
+        used.update(axes)
+        parts.append(axes if len(axes) > 1 else axes[0])
+    return P(*parts)
+
+
+def make_resolver(mesh: Mesh, rules: Rules):
+    """Resolver for models.common.use_sharding_rules (activation hints)."""
+
+    def resolver(shape, logical):
+        spec = resolve_spec(shape, logical, mesh, rules)
+        return NamedSharding(mesh, spec)
+
+    return resolver
+
+
+def param_shardings(api, mesh: Mesh, rules: Rules):
+    """NamedSharding tree matching api.abstract_params()."""
+    axes_tree = api.param_logical_axes()
+    abstract = api.abstract_params()
+    return jax.tree.map(
+        lambda sds, ax: NamedSharding(mesh, resolve_spec(sds.shape, ax, mesh, rules)),
+        abstract,
+        axes_tree,
+    )
+
+
+def batch_shardings(specs: dict, mesh: Mesh, rules: Rules):
+    """Shard every batch input on its leading (batch) dim."""
+    def one(sds):
+        logical = ["batch"] + [None] * (len(sds.shape) - 1)
+        return NamedSharding(mesh, resolve_spec(sds.shape, logical, mesh, rules))
+
+    return {k: one(v) if hasattr(v, "shape") else v for k, v in specs.items()}
+
+
+def cache_shardings(cache_tree, shape_cfg, mesh: Mesh, rules: Rules, layout: str = "default"):
+    """Heuristic decode-cache layouts.
+
+    layout="default":
+      * any dim equal to global_batch shards over the data axes (if divisible);
+      * else a dim equal to seq_len shards over 'data' (context parallelism —
+        the long_500k batch=1 case);
+      * the trailing (feature/head_dim) axis shards over 'model' if divisible.
+    layout="seq_model" (flash-decode, §Perf): additionally shard the cache
+      SEQUENCE axis over 'model'. Attention then computes per-shard partial
+      softmax stats and psums tiny (B, H) reductions instead of resharding
+      the multi-GiB cache every step.
+    Scalars (pos) replicate.
+    """
+    B, S = shape_cfg.global_batch, shape_cfg.seq_len
+    data_axes = _present_axes(mesh, ("pod", "data"))
+    data_size = int(np.prod([mesh.shape[a] for a in data_axes])) if data_axes else 1
+    model_size = mesh.shape.get("model", 1)
+
+    def one(sds):
+        if not hasattr(sds, "shape") or len(sds.shape) == 0:
+            return NamedSharding(mesh, P())
+        parts = [None] * len(sds.shape)
+        batch_done = False
+        for i, d in enumerate(sds.shape):
+            if d == B and not batch_done and B % data_size == 0 and B >= data_size:
+                parts[i] = data_axes if len(data_axes) > 1 else data_axes[0]
+                batch_done = True
+                break
+        if not batch_done and "data" in mesh.shape:
+            for i, d in enumerate(sds.shape):
+                if d == S and S % mesh.shape["data"] == 0:
+                    parts[i] = "data"
+                    batch_done = True
+                    break
+        if layout == "seq_model":
+            for i, d in enumerate(sds.shape):
+                if parts[i] is None and d == S and S % model_size == 0:
+                    parts[i] = "model"
+                    return NamedSharding(mesh, P(*parts))
+        last = len(sds.shape) - 1
+        if parts[last] is None and sds.shape[last] % model_size == 0 and sds.shape[last] >= model_size:
+            parts[last] = "model"
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree.map(one, cache_tree)
+
+
+def scalar_sharding(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,94 @@
+"""Solver launcher: ``python -m repro.launch.solve --matrix poisson125:16``
+
+Single-device or distributed (--shards N, needs that many devices — on CPU
+set XLA_FLAGS=--xla_force_host_platform_device_count=N before launch).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import chronopoulos_cg, jacobi, pcg, pipecg
+from ..core.distributed import make_solver_mesh, pipecg_distributed
+from ..core.perfmodel import decompose
+from ..sparse import (
+    balanced_rows,
+    poisson7,
+    poisson27,
+    poisson125,
+    shard_dia,
+    shard_vector,
+    spmv,
+    synthetic_spd_dia,
+    table1_matrix,
+    unshard_vector,
+)
+
+GENS = {"poisson7": poisson7, "poisson27": poisson27, "poisson125": poisson125}
+
+
+def build_matrix(spec: str):
+    name, _, arg = spec.partition(":")
+    if name in GENS:
+        return GENS[name](int(arg or 8))
+    if name == "synthetic":
+        n, _, nnz = (arg or "1000,9").partition(",")
+        return synthetic_spd_dia(int(n), float(nnz or 9))
+    return table1_matrix(name, scale=float(arg or 1.0))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--matrix", default="poisson27:12")
+    ap.add_argument("--solver", default="pipecg", choices=["pcg", "chronopoulos", "pipecg"])
+    ap.add_argument("--engine", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--method", default="h3", choices=["h1", "h2", "h3"])
+    ap.add_argument("--shards", type=int, default=1)
+    ap.add_argument("--atol", type=float, default=1e-5)
+    ap.add_argument("--maxiter", type=int, default=10000)
+    ap.add_argument("--replace-every", type=int, default=0)
+    ap.add_argument("--weighted", action="store_true", help="nnz perf-model partition (h3)")
+    args = ap.parse_args(argv)
+
+    A = build_matrix(args.matrix)
+    xstar = jnp.ones((A.n,)) / jnp.sqrt(A.n)
+    b = spmv(A, xstar)
+    M = jacobi(A)
+    print(f"matrix {args.matrix}: N={A.n} nnz/N={A.nnz()/A.n:.1f} bw={A.bandwidth}")
+
+    if args.shards > 1:
+        if len(jax.devices()) < args.shards:
+            raise SystemExit(
+                f"need {args.shards} devices; set XLA_FLAGS=--xla_force_host_platform_device_count={args.shards}"
+            )
+        bounds = (
+            decompose(A, args.shards) if args.weighted else balanced_rows(A.n, args.shards)
+        )
+        As = shard_dia(A, bounds)
+        mesh = make_solver_mesh(args.shards)
+        res = pipecg_distributed(
+            As, shard_vector(b, bounds), shard_vector(M.inv_diag, bounds),
+            mesh=mesh, method=args.method, atol=args.atol, maxiter=args.maxiter,
+        )
+        x = unshard_vector(res.x, bounds)
+    else:
+        solver = {"pcg": pcg, "chronopoulos": chronopoulos_cg, "pipecg": pipecg}[args.solver]
+        kw = {}
+        if args.solver == "pipecg":
+            kw = {"engine": args.engine, "replace_every": args.replace_every}
+        res = solver(A, b, M=M, atol=args.atol, maxiter=args.maxiter, **kw)
+        x = res.x
+
+    err = float(jnp.linalg.norm(x - xstar))
+    true_res = float(jnp.linalg.norm(b - spmv(A, x)))
+    print(
+        f"iters={int(res.iterations)} converged={bool(res.converged)} "
+        f"|u|={float(res.residual_norm):.2e} |x-x*|={err:.2e} true_res={true_res:.2e}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``
+
+On this CPU box it runs reduced configs end-to-end (the real-training
+example path); on a TPU fleet the same launcher takes ``--full`` and the
+production mesh. Wires together: config -> model -> sharding rules ->
+train_step -> synthetic data -> CheckpointManager (async, crash-safe) ->
+supervised recovery loop.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import SHAPES, get_config, list_configs, reduced
+from ..data import SyntheticConfig, batch_for_step
+from ..models import build_model
+from ..models.common import use_sharding_rules
+from ..runtime import CheckpointManager, run_with_recovery
+from ..train import AdamWConfig, TrainConfig, init_train_state, make_train_step, warmup_cosine
+from .mesh import make_production_mesh
+from .sharding import DEFAULT_RULES, make_resolver
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b", choices=list_configs())
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--pipelined-clip", action="store_true")
+    ap.add_argument("--fused-optimizer", action="store_true")
+    ap.add_argument("--full", action="store_true", help="full config + production mesh (TPU)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--save-every", type=int, default=50)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch) if args.full else reduced(get_config(args.arch))
+    api = build_model(cfg)
+    print(f"arch={cfg.name} family={cfg.family} params={api.n_params():,} full={args.full}")
+
+    tc = TrainConfig(
+        optimizer=AdamWConfig(
+            lr=args.lr, clip_norm=1.0,
+            pipelined_clip=args.pipelined_clip,
+            apply_fused=args.fused_optimizer,
+        ),
+        remat=args.remat,
+        microbatches=args.microbatches,
+    )
+    step_raw = make_train_step(api, tc, lr_schedule=warmup_cosine(args.lr, 20, args.steps))
+
+    ctx = None
+    if args.full:
+        mesh = make_production_mesh()
+        rules = DEFAULT_RULES()
+        ctx = use_sharding_rules(make_resolver(mesh, rules))
+        ctx.__enter__()
+    step_jit = jax.jit(step_raw, donate_argnums=(0,))
+
+    state = init_train_state(api, jax.random.PRNGKey(0))
+    dc = SyntheticConfig(batch=args.batch, seq_len=args.seq, vocab_size=cfg.vocab_size, seed=0)
+    mgr = CheckpointManager(args.ckpt_dir, save_every=args.save_every, keep=3)
+    restored, s0 = mgr.restore_latest(jax.eval_shape(lambda: state))
+    start = 0
+    if restored is not None:
+        state, start = restored, s0
+        print(f"resumed from step {start}")
+
+    t0 = time.time()
+    metrics_box = {}
+
+    def one_step(state, step):
+        batch = {k: jnp.asarray(v) for k, v in batch_for_step(dc, step, cfg).items()}
+        state, metrics = step_jit(state, batch)
+        if step % 10 == 0:
+            print(
+                f"step {step:4d} loss={float(metrics['loss']):.4f} "
+                f"gnorm={float(metrics['grad_norm']):.3f} ({time.time()-t0:.1f}s)"
+            )
+        metrics_box.update({k: float(v) for k, v in metrics.items()})
+        return state
+
+    state, end = run_with_recovery(one_step, state, args.steps, mgr, start_step=start)
+    print(f"finished at step {end}: loss={metrics_box.get('loss'):.4f} in {time.time()-t0:.1f}s")
+    if ctx is not None:
+        ctx.__exit__(None, None, None)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Model zoo: the 10 assigned architectures across 6 families."""
+from .zoo import ModelApi, build_model
+
+__all__ = ["ModelApi", "build_model"]

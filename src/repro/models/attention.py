@@ -1,0 +1,211 @@
+"""GQA attention (train / prefill / cached decode) + cross-attention.
+
+Weights are kept in fused (d_model, n_heads*head_dim) form so tensor-
+parallel sharding applies to the flat feature axis — this keeps archs whose
+head counts don't divide the model axis (qwen2.5: 40 heads, whisper: 6)
+shardable without padding (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import ParamSpec, apply_rope, causal_mask_bias, rmsnorm, rope_angles, shard_hint
+
+__all__ = ["attn_params", "cross_attn_params", "attention", "cross_attention", "KVCache", "init_kv_cache"]
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S, n_kv, hd)
+    v: jax.Array  # (B, S, n_kv, hd)
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_seq: int, n_layers: int, dtype) -> KVCache:
+    hd = cfg.head_dim_
+    shape = (n_layers, batch, max_seq, cfg.n_kv_heads, hd)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def attn_params(cfg: ArchConfig, d_model: int | None = None) -> dict:
+    d = d_model or cfg.d_model
+    hd = cfg.head_dim_
+    qd, kvd = cfg.n_heads * hd, cfg.n_kv_heads * hd
+    p = {
+        "wq": ParamSpec((d, qd), ("embed", "heads_flat")),
+        "wk": ParamSpec((d, kvd), ("embed", "kv_flat")),
+        "wv": ParamSpec((d, kvd), ("embed", "kv_flat")),
+        "wo": ParamSpec((qd, d), ("heads_flat", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ParamSpec((qd,), ("heads_flat",), init="zeros")
+        p["bk"] = ParamSpec((kvd,), ("kv_flat",), init="zeros")
+        p["bv"] = ParamSpec((kvd,), ("kv_flat",), init="zeros")
+    if cfg.qk_norm:
+        p["q_norm"] = ParamSpec((hd,), (None,), init="ones")
+        p["k_norm"] = ParamSpec((hd,), (None,), init="ones")
+    return p
+
+
+def cross_attn_params(cfg: ArchConfig) -> dict:
+    p = attn_params(cfg)
+    p["gate"] = ParamSpec((1,), (None,), init="zeros")  # llama-vision tanh gate
+    return p
+
+
+def _project_qkv(p, x, cfg: ArchConfig, kv_src=None):
+    hd = cfg.head_dim_
+    kv_in = x if kv_src is None else kv_src
+    q = x @ p["wq"]
+    k = kv_in @ p["wk"]
+    v = kv_in @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    B, Tq = q.shape[0], q.shape[1]
+    Tk = k.shape[1]
+    q = q.reshape(B, Tq, cfg.n_heads, hd)
+    k = k.reshape(B, Tk, cfg.n_kv_heads, hd)
+    v = v.reshape(B, Tk, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    return q, k, v
+
+
+def _sdpa(q, k, v, bias: Optional[jax.Array], n_rep: int):
+    """q (B,Tq,H,hd), k/v (B,Tk,KV,hd); returns (B,Tq,H,hd)."""
+    B, Tq, H, hd = q.shape
+    Tk, KV = k.shape[1], k.shape[2]
+    qg = q.reshape(B, Tq, KV, n_rep, hd)
+    scores = jnp.einsum("bqgrh,bkgh->bgrqk", qg, k, preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    if bias is not None:
+        scores = scores + bias  # broadcast (.., Tq, Tk)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgrqk,bkgh->bqgrh", w, v)
+    return out.reshape(B, Tq, H, hd)
+
+
+def _sdpa_blocked(q, k, v, n_rep: int, q_tile: int):
+    """Blocked-causal attention: static loop over Q tiles, each attending
+    only to its KV prefix, with bf16 score storage.
+
+    Perf-iteration lesson (EXPERIMENTS.md §Perf): a scan-based online
+    softmax REGRESSED HBM traffic because the (Tq, hd) accumulator becomes
+    a loop-carried HBM buffer re-read per chunk. This version has no loop
+    carries — each Q tile is an independent dataflow island — and wins by
+    (a) skipping the strictly-upper-triangular score blocks (~2x) and
+    (b) storing probabilities in the compute dtype instead of f32 (~2x).
+    The full single-pass fix is the Pallas flash kernel
+    (repro.kernels.flash_attn), which applies on the real TPU target.
+    """
+    B, Tq, H, hd = q.shape
+    Tk, KV = k.shape[1], k.shape[2]
+    assert Tq % q_tile == 0, (Tq, q_tile)
+    f32 = jnp.float32
+    qg = q.reshape(B, Tq, KV, n_rep, hd)
+    outs = []
+    for i in range(Tq // q_tile):
+        hi = (i + 1) * q_tile
+        qt = qg[:, i * q_tile : hi]
+        kt, vt = k[:, :hi], v[:, :hi]
+        s = jnp.einsum("bqgrh,bkgh->bgrqk", qt, kt, preferred_element_type=f32)
+        s = s / jnp.sqrt(hd).astype(f32)
+        q_pos = i * q_tile + jnp.arange(q_tile)
+        s = s + jnp.where(jnp.arange(hi)[None, :] <= q_pos[:, None], 0.0, -1e30)
+        p = jax.nn.softmax(s, axis=-1).astype(q.dtype)  # bf16 storage
+        o = jnp.einsum("bgrqk,bkgh->bqgrh", p, vt)
+        outs.append(o.reshape(B, q_tile, H, hd))
+    return jnp.concatenate(outs, axis=1)
+
+
+def _sdpa_decode(q, k_cur, v_cur, cache: KVCache, cache_pos, n_rep: int):
+    """One-token attention over a read-only cache + the current token.
+
+    q (B,1,H,hd); k_cur/v_cur (B,1,KV,hd); cache.k/.v (B,S,KV,hd).
+    Joint softmax over [cache[<pos], current]."""
+    B, _, H, hd = q.shape
+    S, KV = cache.k.shape[1], cache.k.shape[2]
+    f32 = jnp.float32
+    qg = q.reshape(B, 1, KV, n_rep, hd)
+    scale = 1.0 / jnp.sqrt(hd).astype(f32)
+    s_c = jnp.einsum("bqgrh,bkgh->bgrqk", qg, cache.k, preferred_element_type=f32) * scale
+    kv_pos = jnp.arange(S)
+    s_c = s_c + jnp.where(kv_pos < cache_pos, 0.0, -1e30)  # strictly past
+    s_s = jnp.einsum("bqgrh,bqgh->bgrq", qg, k_cur, preferred_element_type=f32) * scale
+    m = jnp.maximum(s_c.max(axis=-1), s_s)  # (B,KV,rep,1)
+    p_c = jnp.exp(s_c - m[..., None])
+    p_s = jnp.exp(s_s - m)
+    denom = p_c.sum(axis=-1) + p_s
+    out = jnp.einsum("bgrqk,bkgh->bqgrh", (p_c / denom[..., None]).astype(q.dtype), cache.v)
+    out = out + (p_s / denom).astype(q.dtype).transpose(0, 3, 1, 2)[..., None] * v_cur.reshape(
+        B, 1, KV, 1, hd
+    )
+    return out.reshape(B, 1, H, hd)
+
+
+def attention(
+    p: dict,
+    x: jax.Array,
+    cfg: ArchConfig,
+    *,
+    positions: jax.Array | None = None,
+    cache: Optional[KVCache] = None,
+    cache_pos: jax.Array | None = None,
+    causal: bool = True,
+):
+    """Self-attention.
+
+    Train/prefill: cache=None -> full causal pass; returns (out, (k, v)).
+    Decode: cache=(k,v) of length S; x is (B, 1, d); cache_pos scalar write
+    index; returns (out, updated (k, v)).
+    """
+    B, T, d = x.shape
+    hd = cfg.head_dim_
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    q, k, v = _project_qkv(p, x, cfg)
+
+    if positions is None:
+        if cache is None:
+            positions = jnp.arange(T)[None, :]
+        else:
+            positions = jnp.broadcast_to(jnp.asarray(cache_pos)[None, None], (B, 1))
+    cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    if cache is None:
+        q = shard_hint(q, ("batch", None, "heads", None))
+        if cfg.attn_chunk > 0 and causal and T % cfg.attn_chunk == 0 and T > cfg.attn_chunk:
+            out = _sdpa_blocked(q, k, v, n_rep, cfg.attn_chunk)
+        else:
+            bias = causal_mask_bias(T, T) if causal else None
+            out = _sdpa(q, k, v, bias, n_rep)
+        new_kv = (k, v)
+    else:
+        # READ-ONLY cache attention: attend over cache[< pos] plus the
+        # current token as an explicit extra column. The cache write is the
+        # caller's job (one small dynamic-update-slice for ALL layers after
+        # the layer scan) — updating inside the scan makes the whole stacked
+        # cache a loop-carried buffer that XLA copies/converts per layer
+        # (the 0.65s -> measured memory blow-up in EXPERIMENTS.md §Perf).
+        out = _sdpa_decode(q, k, v, cache, cache_pos, n_rep)
+        new_kv = (k, v)  # (B, 1, KV, hd) current-token tensors
+
+    out = out.reshape(B, T, cfg.n_heads * hd)
+    return out @ p["wo"], new_kv
+
+
+def cross_attention(p: dict, x: jax.Array, kv_feats: jax.Array, cfg: ArchConfig, gated: bool = False):
+    """Cross-attention: queries from x (B,T,d), keys/values from kv_feats
+    (B,S,d). No RoPE, no causality (encoder side is fully visible)."""
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    q, k, v = _project_qkv(p, x, cfg, kv_src=kv_feats)
+    out = _sdpa(q, k, v, None, n_rep)
+    B, T = x.shape[0], x.shape[1]
+    out = out.reshape(B, T, cfg.n_heads * cfg.head_dim_) @ p["wo"]
+    if gated:
+        out = jnp.tanh(p["gate"].astype(jnp.float32)).astype(out.dtype) * out
+    return out

@@ -1,0 +1,182 @@
+"""Shared model-building blocks: param layout, norms, RoPE, sharding hints.
+
+Parameter single-source-of-truth: every family declares its weights as a
+tree of ``ParamSpec(shape, logical_axes, init)``. From that one tree we
+derive (a) materialized params, (b) abstract ShapeDtypeStructs for the
+dry-run, (c) NamedSharding specs via the launch-layer logical-axis rules.
+
+Sharding hints: models call ``shard_hint(x, axes)`` on activations; outside
+a mesh context it is a no-op, under ``use_sharding_rules`` it becomes
+``with_sharding_constraint`` with divisibility-checked specs (see
+launch/sharding.py).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from dataclasses import dataclass
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "ParamSpec",
+    "materialize",
+    "abstract",
+    "logical_axes_tree",
+    "shard_hint",
+    "use_sharding_rules",
+    "rmsnorm",
+    "layernorm",
+    "make_norm_params",
+    "apply_rope",
+    "rope_angles",
+    "causal_mask_bias",
+    "DTYPES",
+]
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis names, len == len(shape)
+    init: str = "normal"  # normal | zeros | ones | normal_out (scaled by fan-out axis -1)
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_array(key, spec: ParamSpec, dtype) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.full(spec.shape, spec.scale, dtype)
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    std = spec.scale / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dtype)
+
+
+def materialize(key: jax.Array, tree, dtype) -> dict:
+    """ParamSpec tree -> array tree (deterministic per-leaf keys)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    arrays = [_init_array(k, s, dtype) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, arrays)
+
+
+def abstract(tree, dtype) -> dict:
+    """ParamSpec tree -> ShapeDtypeStruct tree (no allocation; dry-run)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+        tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def logical_axes_tree(tree) -> dict:
+    return jax.tree.map(lambda s: s.axes, tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# --------------------------------------------------------------------------
+# sharding-hint context (installed by launch/sharding.py)
+# --------------------------------------------------------------------------
+
+_ACTIVE_RULES: contextvars.ContextVar = contextvars.ContextVar("repro_sharding_rules", default=None)
+_ACTIVE_MESH: contextvars.ContextVar = contextvars.ContextVar("repro_active_mesh", default=None)
+
+
+@contextlib.contextmanager
+def use_sharding_rules(resolver: Callable, mesh=None):
+    """resolver(shape, logical_axes) -> NamedSharding | None.
+
+    ``mesh`` (optional) additionally exposes the active device mesh to
+    modules that build explicit shard_map regions (the sharded MoE
+    dispatch) via ``current_mesh()``.
+    """
+    token = _ACTIVE_RULES.set(resolver)
+    token_m = _ACTIVE_MESH.set(mesh)
+    try:
+        yield
+    finally:
+        _ACTIVE_RULES.reset(token)
+        _ACTIVE_MESH.reset(token_m)
+
+
+def current_mesh():
+    return _ACTIVE_MESH.get()
+
+
+def shard_hint(x: jax.Array, axes: Tuple[Optional[str], ...]) -> jax.Array:
+    resolver = _ACTIVE_RULES.get()
+    if resolver is None:
+        return x
+    sharding = resolver(x.shape, axes)
+    if sharding is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, sharding)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def make_norm_params(d: int, kind: str) -> dict:
+    if kind == "rmsnorm":
+        return {"scale": ParamSpec((d,), ("embed",), init="ones")}
+    return {"scale": ParamSpec((d,), ("embed",), init="ones"),
+            "bias": ParamSpec((d,), ("embed",), init="zeros")}
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * scale + bias
+
+
+def apply_norm(x, params, kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm(x, params["scale"])
+    return layernorm(x, params["scale"], params["bias"])
+
+
+# --------------------------------------------------------------------------
+# rotary position embeddings
+# --------------------------------------------------------------------------
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions (...,) int -> cos/sin of shape (..., head_dim//2), f32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., seq, heads, head_dim); cos/sin (seq, head_dim//2) or broadcastable."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    # broadcast cos/sin over the heads axis
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([xf1 * c - xf2 * s, xf2 * c + xf1 * s], axis=-1).astype(x.dtype)
+
+
+def causal_mask_bias(q_len: int, kv_len: int, q_offset=0, dtype=jnp.float32) -> jax.Array:
+    """(q_len, kv_len) additive bias: 0 where kv <= q_offset + q, -inf after."""
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    kv_pos = jnp.arange(kv_len)[None, :]
+    return jnp.where(kv_pos <= q_pos, 0.0, -1e30).astype(dtype)

@@ -1,0 +1,111 @@
+"""Chunked gated linear attention — the shared sub-quadratic engine.
+
+Both mLSTM (xLSTM) and Mamba-2's SSD layer are scalar-decay linear
+attention in disguise:
+
+    S_t = a_t * S_{t-1} + b_t * k_t v_t^T          (state (dk, dv) per head)
+    n_t = a_t * n_{t-1} + b_t * k_t                (normalizer, optional)
+    y_t = q_t @ S_t [ / max(|q_t @ n_t|, 1) ]
+
+with per-(head, step) scalars a_t (decay, in (0,1]) and b_t (input gate).
+The chunkwise-parallel form (SSD / GLA style) computes within-chunk
+interactions as a masked quadratic in the chunk (MXU-friendly (L, L)
+matmuls) and carries the state across chunks with a ``lax.scan`` —
+O(T * L) work instead of O(T^2), which is what makes ``long_500k``
+runnable for the ssm/hybrid architectures.
+
+Shapes: q, k (B, T, H, dk); v (B, T, H, dv); log_a, b (B, T, H).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["GLAState", "gla_init_state", "gla_chunked", "gla_step"]
+
+
+class GLAState(NamedTuple):
+    S: jax.Array  # (B, H, dk, dv)
+    n: jax.Array  # (B, H, dk)
+
+
+def gla_init_state(batch: int, heads: int, dk: int, dv: int, dtype=jnp.float32) -> GLAState:
+    return GLAState(
+        S=jnp.zeros((batch, heads, dk, dv), dtype),
+        n=jnp.zeros((batch, heads, dk), dtype),
+    )
+
+
+def gla_chunked(q, k, v, log_a, b, chunk: int, *, state: GLAState | None = None, normalize: bool = False):
+    """Full-sequence chunkwise pass. Returns (y (B,T,H,dv), final GLAState).
+
+    T must be a multiple of ``chunk`` (pad upstream).
+    """
+    B, T, H, dk = q.shape
+    dv = v.shape[-1]
+    L = chunk
+    assert T % L == 0, (T, L)
+    C = T // L
+    f32 = jnp.float32
+
+    # fold the input gate into k (k_t' = b_t * k_t)
+    kb = k.astype(f32) * b.astype(f32)[..., None]
+
+    def to_chunks(x):  # (B, T, ...) -> (C, B, L, ...)
+        return jnp.moveaxis(x.reshape(B, C, L, *x.shape[2:]), 1, 0)
+
+    qc = to_chunks(q.astype(f32))
+    kc = to_chunks(kb)
+    vc = to_chunks(v.astype(f32))
+    ac = to_chunks(log_a.astype(f32))  # (C, B, L, H)
+
+    if state is None:
+        state = gla_init_state(B, H, dk, dv)
+
+    def scan_fn(carry, inp):
+        S, n = carry  # (B,H,dk,dv), (B,H,dk)
+        qq, kk, vv, la = inp  # (B,L,H,dk), (B,L,H,dk), (B,L,H,dv), (B,L,H)
+        # cumulative decay within the chunk: A_t = sum_{j<=t} log a_j
+        A = jnp.cumsum(la, axis=1)  # (B,L,H)
+        eA = jnp.exp(A)
+        # inter-chunk: y_inter[t] = e^{A_t} q_t S_prev
+        q_sc = qq * eA[..., None]
+        y_inter = jnp.einsum("blhk,bhkv->blhv", q_sc, S)
+        n_inter = jnp.einsum("blhk,bhk->blh", q_sc, n)
+        # intra-chunk: D[t,s] = e^{A_t - A_s} for s <= t
+        D = A[:, :, None, :] - A[:, None, :, :]  # (B, L_t, L_s, H)
+        mask = (jnp.arange(L)[:, None] >= jnp.arange(L)[None, :])[None, :, :, None]
+        D = jnp.where(mask, jnp.exp(D), 0.0)
+        scores = jnp.einsum("blhk,bmhk->blmh", qq, kk) * D
+        y_intra = jnp.einsum("blmh,bmhv->blhv", scores, vv)
+        n_intra = jnp.einsum("blmh,bmhk->blhk", scores, jnp.ones_like(kk[..., :1])).squeeze(-1)
+        # state update: S_new = e^{A_L} S + sum_s e^{A_L - A_s} k_s v_s^T
+        eTot = jnp.exp(A[:, -1, :])  # (B,H)
+        w = jnp.exp(A[:, -1:, :] - A)  # (B,L,H)
+        k_sc = kk * w[..., None]
+        S_new = S * eTot[..., None, None] + jnp.einsum("blhk,blhv->bhkv", k_sc, vv)
+        n_new = n * eTot[..., None] + jnp.sum(k_sc, axis=1)
+        return (S_new, n_new), (y_inter + y_intra, n_inter + n_intra)
+
+    (S_f, n_f), (ys, ns) = jax.lax.scan(scan_fn, (state.S.astype(f32), state.n.astype(f32)), (qc, kc, vc, ac))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, H, dv)
+    if normalize:
+        den = jnp.moveaxis(ns, 0, 1).reshape(B, T, H)
+        y = y / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    return y.astype(v.dtype), GLAState(S=S_f, n=n_f)
+
+
+def gla_step(q, k, v, log_a, b, state: GLAState, *, normalize: bool = False):
+    """Single-token recurrent update. q,k (B,H,dk); v (B,H,dv); log_a,b (B,H)."""
+    f32 = jnp.float32
+    a = jnp.exp(log_a.astype(f32))[..., None]  # (B,H,1)
+    kb = k.astype(f32) * b.astype(f32)[..., None]
+    S = state.S * a[..., None] + kb[..., :, None] * v.astype(f32)[..., None, :]
+    n = state.n * a + kb
+    y = jnp.einsum("bhk,bhkv->bhv", q.astype(f32), S)
+    if normalize:
+        den = jnp.einsum("bhk,bhk->bh", q.astype(f32), n)
+        y = y / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    return y.astype(v.dtype), GLAState(S=S, n=n)

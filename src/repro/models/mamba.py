@@ -1,0 +1,237 @@
+"""Mamba-2 (SSD) blocks and the Zamba2 hybrid LM.
+
+Mamba-2's SSD layer is scalar-decay linear attention: per-head decay
+a_t = exp(-softplus(dt_t) * exp(A_log)) and input scale dt_t, with shared
+B/C projections playing k/q — mapped onto the chunked GLA engine. A short
+causal depthwise conv precedes the SSM input (kernel 4), with a conv-tail
+cache for decode.
+
+Zamba2 (cfg.attn_every=k): groups of k Mamba-2 blocks followed by ONE
+shared full-attention transformer block (weights reused by every group —
+Zamba2's parameter-sharing design; per-invocation LoRA deltas omitted, see
+DESIGN.md §9). ``long_500k`` decode attends over the shared block's KV
+cache, sharded over the data axis (context parallel).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .attention import KVCache, attention, attn_params
+from .common import ParamSpec, apply_norm, make_norm_params, rmsnorm
+from .gla import GLAState, gla_chunked, gla_init_state, gla_step
+from .mlp import swiglu, swiglu_params
+from .transformer import embed_params, embed_tokens, stack_specs, unembed
+
+__all__ = [
+    "ZambaState",
+    "mamba_block_params",
+    "zamba_layout",
+    "zamba_forward",
+    "zamba_decode",
+    "zamba_init_state",
+]
+
+_CONV_K = 4
+
+
+class ZambaState(NamedTuple):
+    ssm: GLAState        # stacked (L_mamba, B, H, dk, dv)
+    conv: jax.Array      # (L_mamba, B, _CONV_K-1, conv_channels)
+    attn_kv: KVCache     # (n_groups, B, S, KV, hd) — shared-block caches
+    pos: jax.Array       # scalar int32
+
+
+def mamba_block_params(cfg: ArchConfig) -> dict:
+    d, din = cfg.d_model, cfg.d_inner
+    nh = cfg.ssm_heads_
+    st = cfg.ssm_state
+    conv_ch = din + 2 * st  # x, B, C go through the conv
+    return {
+        "norm": make_norm_params(d, cfg.norm),
+        "w_in": ParamSpec((d, 2 * din + 2 * st + nh), ("embed", "mlp")),
+        "conv_w": ParamSpec((_CONV_K, conv_ch), (None, "mlp"), scale=0.5),
+        "A_log": ParamSpec((nh,), (None,), init="zeros"),
+        "D": ParamSpec((nh,), (None,), init="ones"),
+        "dt_bias": ParamSpec((nh,), (None,), init="zeros"),
+        "out_norm": {"scale": ParamSpec((din,), ("mlp",), init="ones")},
+        "w_out": ParamSpec((din, d), ("mlp", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, tail: jax.Array | None):
+    """Depthwise causal conv, kernel K. x (B,T,C); w (K,C); tail (B,K-1,C)
+    carries the previous K-1 inputs for decode. Returns (y, new_tail)."""
+    B, T, C = x.shape
+    K = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((B, K - 1, C), x.dtype)
+    xt = jnp.concatenate([tail, x], axis=1)  # (B, T+K-1, C)
+    y = jnp.zeros_like(x)
+    for i in range(K):
+        y = y + xt[:, i : i + T, :] * w[i]
+    new_tail = xt[:, -(K - 1) :, :]
+    return y, new_tail
+
+
+def mamba_apply(lp, x, cfg: ArchConfig, state: GLAState | None, conv_tail, *, step: bool):
+    B, T, d = x.shape
+    din = cfg.d_inner
+    nh = cfg.ssm_heads_
+    stt = cfg.ssm_state
+    dh = din // nh
+
+    h = apply_norm(x, lp["norm"], cfg.norm)
+    proj = h @ lp["w_in"]
+    z, xbc, dt_raw = jnp.split(proj, [din, 2 * din + 2 * stt], axis=-1)
+    xbc, new_tail = _causal_conv(xbc, lp["conv_w"], conv_tail)
+    xbc = jax.nn.silu(xbc)
+    xs, Bp, Cp = jnp.split(xbc, [din, din + stt], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + lp["dt_bias"])  # (B,T,nh)
+    log_a = -jnp.exp(lp["A_log"].astype(jnp.float32)) * dt            # (B,T,nh)
+
+    # q=C, k=B shared across heads; v = x (per head), input gate b=dt
+    q = jnp.broadcast_to(Cp[:, :, None, :], (B, T, nh, stt))
+    k = jnp.broadcast_to(Bp[:, :, None, :], (B, T, nh, stt))
+    v = xs.reshape(B, T, nh, dh)
+    if step:
+        y, new_state = gla_step(q[:, 0], k[:, 0], v[:, 0], log_a[:, 0], dt[:, 0], state)
+        y = y[:, None]
+    else:
+        y, new_state = gla_chunked(q, k, v, log_a, dt, cfg.chunk, state=state)
+    y = y + v * lp["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B, T, din)
+    y = rmsnorm(y * jax.nn.silu(z), lp["out_norm"]["scale"])
+    return x + y @ lp["w_out"], new_state, new_tail
+
+
+def _shared_block_params(cfg: ArchConfig) -> dict:
+    return {
+        "attn_norm": make_norm_params(cfg.d_model, cfg.norm),
+        "attn": attn_params(cfg),
+        "mlp_norm": make_norm_params(cfg.d_model, cfg.norm),
+        "mlp": swiglu_params(cfg.d_model, cfg.d_ff),
+    }
+
+
+def zamba_layout(cfg: ArchConfig) -> dict:
+    n_groups = cfg.n_layers // cfg.attn_every
+    n_mamba = cfg.n_layers - n_groups  # k-1 mamba per group... see forward
+    # interpretation: n_layers counts mamba blocks; the shared attn block is
+    # applied after every ``attn_every`` of them (9 applications for 54/6).
+    del n_mamba
+    return {
+        **embed_params(cfg),
+        "mamba": stack_specs(mamba_block_params(cfg), cfg.n_layers),
+        "shared_attn": _shared_block_params(cfg),  # ONE set of weights
+    }
+
+
+def _shared_block_apply(sp, x, cfg: ArchConfig, *, cache=None, cache_pos=None):
+    h = apply_norm(x, sp["attn_norm"], cfg.norm)
+    a, kv = attention(sp["attn"], h, cfg, cache=cache, cache_pos=cache_pos)
+    x = x + a
+    h = apply_norm(x, sp["mlp_norm"], cfg.norm)
+    return x + swiglu(sp["mlp"], h), kv
+
+
+def zamba_forward(params: dict, tokens: jax.Array, cfg: ArchConfig, *, remat: bool = False,
+                  return_state: bool = False):
+    x = embed_tokens(params, tokens, cfg)
+    k = cfg.attn_every
+    n_groups = cfg.n_layers // k
+
+    def m_tree(g):
+        return jax.tree.map(lambda a: a.reshape(n_groups, k, *a.shape[1:])[g], params["mamba"])
+
+    ssm_states, conv_tails, attn_kvs = [], [], []
+    for g in range(n_groups):
+        def body(x, lp):
+            y, st, tail = mamba_apply(lp, x, cfg, None, None, step=False)
+            return y, (st, tail)
+
+        from .transformer import remat_wrap
+
+        fn = remat_wrap(body, remat)
+        x, (sts, tails) = jax.lax.scan(fn, x, m_tree(g))
+        x, kv = _shared_block_apply(params["shared_attn"], x, cfg)
+        ssm_states.append(sts)
+        conv_tails.append(tails)
+        attn_kvs.append(kv)
+
+    logits = unembed(params, x, cfg)
+    if return_state:
+        state = ZambaState(
+            ssm=GLAState(
+                S=jnp.concatenate([s.S for s in ssm_states], axis=0),
+                n=jnp.concatenate([s.n for s in ssm_states], axis=0),
+            ),
+            conv=jnp.concatenate(conv_tails, axis=0),
+            attn_kv=KVCache(
+                k=jnp.stack([kv[0] for kv in attn_kvs]),
+                v=jnp.stack([kv[1] for kv in attn_kvs]),
+            ),
+            pos=jnp.int32(tokens.shape[1]),
+        )
+        return logits, state
+    return logits
+
+
+def zamba_init_state(cfg: ArchConfig, batch: int, max_seq: int, dtype) -> ZambaState:
+    nh = cfg.ssm_heads_
+    din = cfg.d_inner
+    dh = din // nh
+    stt = cfg.ssm_state
+    k = cfg.attn_every
+    n_groups = cfg.n_layers // k
+    L = cfg.n_layers
+    conv_ch = din + 2 * stt
+    return ZambaState(
+        ssm=GLAState(
+            S=jnp.zeros((L, batch, nh, stt, dh), jnp.float32),
+            n=jnp.zeros((L, batch, nh, stt), jnp.float32),
+        ),
+        conv=jnp.zeros((L, batch, _CONV_K - 1, conv_ch), dtype),
+        attn_kv=KVCache(
+            k=jnp.zeros((n_groups, batch, max_seq, cfg.n_kv_heads, cfg.head_dim_), dtype),
+            v=jnp.zeros((n_groups, batch, max_seq, cfg.n_kv_heads, cfg.head_dim_), dtype),
+        ),
+        pos=jnp.int32(0),
+    )
+
+
+def zamba_decode(params: dict, token: jax.Array, state: ZambaState, pos, cfg: ArchConfig):
+    x = embed_tokens(params, token, cfg)
+    k = cfg.attn_every
+    n_groups = cfg.n_layers // k
+
+    new_S, new_n, new_tails = [], [], []
+    new_k, new_v = [], []
+    for g in range(n_groups):
+        for j in range(k):
+            li = g * k + j
+            lp = jax.tree.map(lambda a: a[li], params["mamba"])
+            st = GLAState(S=state.ssm.S[li], n=state.ssm.n[li])
+            x, st2, tail = mamba_apply(lp, x, cfg, st, state.conv[li], step=True)
+            new_S.append(st2.S)
+            new_n.append(st2.n)
+            new_tails.append(tail)
+        cache = KVCache(k=state.attn_kv.k[g], v=state.attn_kv.v[g])
+        x, (kc, vc) = _shared_block_apply(params["shared_attn"], x, cfg, cache=cache, cache_pos=pos)
+        new_k.append(kc)
+        new_v.append(vc)
+
+    logits = unembed(params, x, cfg)
+    from .transformer import write_cache
+
+    new_state = ZambaState(
+        ssm=GLAState(S=jnp.stack(new_S), n=jnp.stack(new_n)),
+        conv=jnp.stack(new_tails),
+        attn_kv=write_cache(state.attn_kv, jnp.stack(new_k), jnp.stack(new_v), pos),
+        pos=pos + 1,
+    )
+    return logits, new_state

@@ -1,0 +1,38 @@
+"""Dense MLP blocks (SwiGLU / GELU) with tensor-parallel-friendly layouts."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec, shard_hint
+
+__all__ = ["swiglu_params", "swiglu", "gelu_mlp_params", "gelu_mlp"]
+
+
+def swiglu_params(d: int, f: int) -> dict:
+    return {
+        "w_gate": ParamSpec((d, f), ("embed", "mlp")),
+        "w_up": ParamSpec((d, f), ("embed", "mlp")),
+        "w_down": ParamSpec((f, d), ("mlp", "embed")),
+    }
+
+
+def swiglu(p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = shard_hint(h, ("batch", None, "mlp"))
+    return h @ p["w_down"]
+
+
+def gelu_mlp_params(d: int, f: int) -> dict:
+    return {
+        "w_up": ParamSpec((d, f), ("embed", "mlp")),
+        "b_up": ParamSpec((f,), ("mlp",), init="zeros"),
+        "w_down": ParamSpec((f, d), ("mlp", "embed")),
+        "b_down": ParamSpec((d,), ("embed",), init="zeros"),
+    }
+
+
+def gelu_mlp(p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(x @ p["w_up"] + p["b_up"])
+    h = shard_hint(h, ("batch", None, "mlp"))
+    return h @ p["w_down"] + p["b_down"]

@@ -1,0 +1,95 @@
+"""MoE decoder LM (granite-moe-1b-a400m: 32e top-8; olmoe-1b-7b: 64e top-8).
+
+Attention stack identical to the dense family; every layer's FFN is the
+capacity-bounded top-k MoE from models/moe.py. The auxiliary load-balance
+loss is summed across layers and returned alongside the logits.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .attention import KVCache, attention, attn_params
+from .common import apply_norm, make_norm_params
+from .moe import moe_ffn, moe_params
+from .transformer import embed_params, embed_tokens, stack_specs, unembed
+
+__all__ = ["moe_lm_layout", "moe_lm_forward", "moe_lm_decode"]
+
+
+def _moe_layer_params(cfg: ArchConfig) -> dict:
+    return {
+        "attn_norm": make_norm_params(cfg.d_model, cfg.norm),
+        "attn": attn_params(cfg),
+        "mlp_norm": make_norm_params(cfg.d_model, cfg.norm),
+        "moe": moe_params(cfg.d_model, cfg.d_ff, cfg.n_experts),
+    }
+
+
+def moe_lm_layout(cfg: ArchConfig) -> dict:
+    return {
+        **embed_params(cfg),
+        "layers": stack_specs(_moe_layer_params(cfg), cfg.n_layers),
+    }
+
+
+def _moe_layer_apply(lp, x, cfg: ArchConfig, *, cache: Optional[KVCache] = None, cache_pos=None):
+    from .common import current_mesh
+    from .moe import moe_ffn_sharded
+
+    h = apply_norm(x, lp["attn_norm"], cfg.norm)
+    a, new_kv = attention(lp["attn"], h, cfg, cache=cache, cache_pos=cache_pos)
+    x = x + a
+    h = apply_norm(x, lp["mlp_norm"], cfg.norm)
+    B, T, d = h.shape
+    mesh = current_mesh()
+    use_sharded = (
+        mesh is not None
+        and "model" in mesh.shape
+        and cfg.n_experts % mesh.shape["model"] == 0
+        and all(B % mesh.shape[a] == 0 for a in ("pod", "data") if a in mesh.shape)
+    )
+    if use_sharded:
+        y3, aux = moe_ffn_sharded(lp["moe"], h, cfg.top_k, cfg.moe_capacity_factor)
+        x = x + y3
+    else:
+        y, aux = moe_ffn(lp["moe"], h.reshape(B * T, d), cfg.top_k, cfg.moe_capacity_factor)
+        x = x + y.reshape(B, T, d)
+    return x, new_kv, aux
+
+
+def moe_lm_forward(params: dict, tokens: jax.Array, cfg: ArchConfig, *, remat: bool = False,
+                   return_cache: bool = False):
+    """Returns (logits, aux_loss) or (logits, aux_loss, kvs)."""
+    x = embed_tokens(params, tokens, cfg)
+
+    def body(carry, lp):
+        x, aux_sum = carry
+        y, kv, aux = _moe_layer_apply(lp, x, cfg)
+        return (y, aux_sum + aux), kv if return_cache else None
+
+    from .transformer import remat_wrap
+
+    fn = remat_wrap(body, remat)
+    (x, aux), kvs = jax.lax.scan(fn, (x, jnp.float32(0.0)), params["layers"])
+    logits = unembed(params, x, cfg)
+    if return_cache:
+        return logits, aux, kvs
+    return logits, aux
+
+
+def moe_lm_decode(params: dict, token: jax.Array, cache: KVCache, pos, cfg: ArchConfig):
+    from .transformer import write_cache
+
+    x = embed_tokens(params, token, cfg)
+
+    def body(x, inp):
+        lp, ck, cv = inp
+        y, (kc, vc), _aux = _moe_layer_apply(lp, x, cfg, cache=KVCache(ck, cv), cache_pos=pos)
+        return y, (kc, vc)
+
+    x, (kts, vts) = jax.lax.scan(body, x, (params["layers"], cache.k, cache.v))
+    return unembed(params, x, cfg), write_cache(cache, kts, vts, pos)

@@ -1,0 +1,156 @@
+"""Dense decoder-only LM (qwen2.5 / qwen3 / stablelm / internlm2) and the
+building blocks reused by the MoE / VLM / hybrid families.
+
+Layers are scanned (stacked weights with a leading ``layers`` axis): one
+compiled layer body regardless of depth, which keeps 48-layer x 512-device
+dry-runs tractable and makes remat policies uniform.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .attention import KVCache, attention, attn_params
+from .common import DTYPES, ParamSpec, apply_norm, make_norm_params, shard_hint
+from .mlp import swiglu, swiglu_params
+
+__all__ = [
+    "stack_specs",
+    "embed_params",
+    "dense_layer_params",
+    "dense_layer_apply",
+    "dense_lm_layout",
+    "dense_lm_forward",
+    "dense_lm_decode",
+    "embed_tokens",
+    "unembed",
+]
+
+
+def stack_specs(tree, n: int):
+    """Add a leading stacked-layers axis to every ParamSpec in the tree."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n, *s.shape), ("layers", *s.axes), init=s.init, scale=s.scale),
+        tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def embed_params(cfg: ArchConfig) -> dict:
+    p = {"embedding": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"))}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    p["final_norm"] = make_norm_params(cfg.d_model, cfg.norm)
+    return p
+
+
+def embed_tokens(params: dict, tokens: jax.Array, cfg: ArchConfig) -> jax.Array:
+    x = params["embedding"][tokens]
+    return shard_hint(x, ("batch", None, None))
+
+
+def unembed(params: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+    head = params["embedding"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return shard_hint(logits, ("batch", None, "vocab"))
+
+
+def dense_layer_params(cfg: ArchConfig) -> dict:
+    return {
+        "attn_norm": make_norm_params(cfg.d_model, cfg.norm),
+        "attn": attn_params(cfg),
+        "mlp_norm": make_norm_params(cfg.d_model, cfg.norm),
+        "mlp": swiglu_params(cfg.d_model, cfg.d_ff),
+    }
+
+
+def dense_layer_apply(
+    lp: dict,
+    x: jax.Array,
+    cfg: ArchConfig,
+    *,
+    positions=None,
+    cache: Optional[KVCache] = None,
+    cache_pos=None,
+):
+    from jax.ad_checkpoint import checkpoint_name
+
+    h = apply_norm(x, lp["attn_norm"], cfg.norm)
+    a, new_kv = attention(lp["attn"], h, cfg, positions=positions, cache=cache, cache_pos=cache_pos)
+    # named so the "save_collectives" remat policy can pin the post-psum
+    # tensors and avoid re-running the TP all-reduces in the backward pass
+    x = x + checkpoint_name(a, "attn_out")
+    h = apply_norm(x, lp["mlp_norm"], cfg.norm)
+    x = x + checkpoint_name(swiglu(lp["mlp"], h), "mlp_out")
+    x = shard_hint(x, ("batch", None, None))
+    return x, new_kv
+
+
+# ---------------------------------------------------------------------------
+# full dense LM
+# ---------------------------------------------------------------------------
+
+def dense_lm_layout(cfg: ArchConfig) -> dict:
+    return {
+        **embed_params(cfg),
+        "layers": stack_specs(dense_layer_params(cfg), cfg.n_layers),
+    }
+
+
+def remat_wrap(body, remat):
+    """remat: False | True (full) | "save_collectives" (keep post-psum
+    activations so the backward pass re-runs compute but not collectives)."""
+    if not remat:
+        return body
+    if remat == "save_collectives":
+        policy = jax.checkpoint_policies.save_only_these_names("attn_out", "mlp_out")
+        return jax.checkpoint(body, policy=policy)
+    return jax.checkpoint(body)
+
+
+def dense_lm_forward(params: dict, tokens: jax.Array, cfg: ArchConfig, *, remat=False,
+                     return_cache: bool = False):
+    """Causal forward over full sequences (train / prefill).
+
+    return_cache=True additionally returns per-layer stacked (k, v) of shape
+    (L, B, T, KV, hd) for prefill->decode handoff.
+    """
+    x = embed_tokens(params, tokens, cfg)
+
+    def body(x, lp):
+        y, kv = dense_layer_apply(lp, x, cfg)
+        return y, kv if return_cache else None
+
+    fn = remat_wrap(body, remat)
+    x, kvs = jax.lax.scan(fn, x, params["layers"])
+    logits = unembed(params, x, cfg)
+    if return_cache:
+        return logits, kvs
+    return logits
+
+
+def write_cache(cache: KVCache, k_toks: jax.Array, v_toks: jax.Array, pos) -> KVCache:
+    """Insert per-layer current-token k/v (L, B, 1, KV, hd) at position pos
+    with ONE dynamic-update-slice per tensor (never loop-carried)."""
+    nk = jax.lax.dynamic_update_slice(cache.k, k_toks.astype(cache.k.dtype), (0, 0, pos, 0, 0))
+    nv = jax.lax.dynamic_update_slice(cache.v, v_toks.astype(cache.v.dtype), (0, 0, pos, 0, 0))
+    return KVCache(nk, nv)
+
+
+def dense_lm_decode(params: dict, token: jax.Array, cache: KVCache, pos, cfg: ArchConfig):
+    """One decode step. token (B, 1) int32; cache (L, B, S, KV, hd) pair;
+    pos scalar int32 current write index. Returns (logits (B,1,V), cache)."""
+    x = embed_tokens(params, token, cfg)
+
+    def body(x, inp):
+        lp, ck, cv = inp
+        y, (kc, vc) = dense_layer_apply(lp, x, cfg, cache=KVCache(ck, cv), cache_pos=pos)
+        return y, (kc, vc)
+
+    x, (kts, vts) = jax.lax.scan(body, x, (params["layers"], cache.k, cache.v))
+    logits = unembed(params, x, cfg)
+    return logits, write_cache(cache, kts, vts, pos)

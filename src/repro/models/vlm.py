@@ -1,0 +1,138 @@
+"""Llama-3.2-Vision-style VLM backbone: a dense decoder with gated
+cross-attention layers interleaved every ``cross_attn_every`` self layers.
+
+The ViT frontend is a STUB per the assignment: ``input_specs`` provides
+pre-projected patch embeddings (B, n_img_tokens, d_model). Cross layers use
+the zero-init tanh gate of the released model so initial behaviour matches
+the text-only backbone.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .attention import KVCache, attention, cross_attn_params, cross_attention
+from .common import apply_norm, make_norm_params
+from .mlp import swiglu, swiglu_params
+from .transformer import (
+    dense_layer_apply,
+    dense_layer_params,
+    embed_params,
+    embed_tokens,
+    stack_specs,
+    unembed,
+)
+
+__all__ = ["vlm_layout", "vlm_forward", "vlm_decode", "VLMCache", "vlm_init_cache"]
+
+
+class VLMCache(NamedTuple):
+    self_kv: KVCache     # (L_self, B, S, KV, hd)
+    img_feats: jax.Array  # (B, n_img, d)
+
+
+def _cross_layer_params(cfg: ArchConfig) -> dict:
+    return {
+        "norm": make_norm_params(cfg.d_model, cfg.norm),
+        "cross": cross_attn_params(cfg),
+        "mlp_norm": make_norm_params(cfg.d_model, cfg.norm),
+        "mlp": swiglu_params(cfg.d_model, cfg.d_ff),
+        }
+
+
+def _groups(cfg: ArchConfig) -> tuple[int, int]:
+    """(n_groups, self_per_group): every group = k self layers + 1 cross."""
+    k = cfg.cross_attn_every
+    n_groups = cfg.n_layers // k
+    return n_groups, k - 1
+
+
+def vlm_layout(cfg: ArchConfig) -> dict:
+    n_groups, self_per = _groups(cfg)
+    return {
+        **embed_params(cfg),
+        "self_layers": stack_specs(dense_layer_params(cfg), n_groups * self_per),
+        "cross_layers": stack_specs(_cross_layer_params(cfg), n_groups),
+    }
+
+
+def _cross_apply(lp, x, img, cfg: ArchConfig):
+    h = apply_norm(x, lp["norm"], cfg.norm)
+    x = x + cross_attention(lp["cross"], h, img, cfg, gated=True)
+    h = apply_norm(x, lp["mlp_norm"], cfg.norm)
+    return x + swiglu(lp["mlp"], h)
+
+
+def vlm_forward(params: dict, tokens: jax.Array, img_feats: jax.Array, cfg: ArchConfig,
+                *, remat: bool = False, return_cache: bool = False):
+    x = embed_tokens(params, tokens, cfg)
+    n_groups, self_per = _groups(cfg)
+
+    def s_tree(g):
+        return jax.tree.map(
+            lambda a: a.reshape(n_groups, self_per, *a.shape[1:])[g], params["self_layers"]
+        )
+
+    kvs = []
+    for g in range(n_groups):
+        def body(x, lp):
+            y, kv = dense_layer_apply(lp, x, cfg)
+            return y, kv if return_cache else None
+
+        from .transformer import remat_wrap
+
+        fn = remat_wrap(body, remat)
+        x, kv = jax.lax.scan(fn, x, s_tree(g))
+        c_lp = jax.tree.map(lambda a: a[g], params["cross_layers"])
+        x = _cross_apply(c_lp, x, img_feats, cfg)
+        kvs.append(kv)
+
+    logits = unembed(params, x, cfg)
+    if return_cache:
+        cache = KVCache(
+            k=jnp.concatenate([kv[0] for kv in kvs], axis=0),
+            v=jnp.concatenate([kv[1] for kv in kvs], axis=0),
+        )
+        return logits, cache
+    return logits
+
+
+def vlm_init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype) -> VLMCache:
+    n_groups, self_per = _groups(cfg)
+    hd = cfg.head_dim_
+    L = n_groups * self_per
+    return VLMCache(
+        self_kv=KVCache(
+            k=jnp.zeros((L, batch, max_seq, cfg.n_kv_heads, hd), dtype),
+            v=jnp.zeros((L, batch, max_seq, cfg.n_kv_heads, hd), dtype),
+        ),
+        img_feats=jnp.zeros((batch, cfg.n_img_tokens, cfg.d_model), dtype),
+    )
+
+
+def vlm_decode(params: dict, token: jax.Array, cache: VLMCache, pos, cfg: ArchConfig):
+    x = embed_tokens(params, token, cfg)
+    n_groups, self_per = _groups(cfg)
+
+    new_k, new_v = [], []
+    for g in range(n_groups):
+        for j in range(self_per):
+            li = g * self_per + j
+            lp = jax.tree.map(lambda a: a[li], params["self_layers"])
+            kvc = KVCache(k=cache.self_kv.k[li], v=cache.self_kv.v[li])
+            x, (kc, vc) = dense_layer_apply(lp, x, cfg, cache=kvc, cache_pos=pos)
+            new_k.append(kc)
+            new_v.append(vc)
+        c_lp = jax.tree.map(lambda a: a[g], params["cross_layers"])
+        x = _cross_apply(c_lp, x, cache.img_feats, cfg)
+
+    logits = unembed(params, x, cfg)
+    from .transformer import write_cache
+
+    return logits, VLMCache(
+        self_kv=write_cache(cache.self_kv, jnp.stack(new_k), jnp.stack(new_v), pos),
+        img_feats=cache.img_feats,
+    )

@@ -1,0 +1,238 @@
+"""xLSTM LM (xlstm-1.3b): mLSTM blocks with periodic sLSTM blocks.
+
+mLSTM = matrix-memory LSTM: exponential-gated linear attention with a
+normalizer — mapped onto the shared chunked GLA engine (models/gla.py),
+sub-quadratic in sequence length (so ``long_500k`` runs for this arch).
+sLSTM = scalar-memory LSTM with recurrent gate connections — inherently
+sequential, computed with ``lax.scan`` over time (stabilized exponential
+gating per the xLSTM paper).
+
+Simplifications vs. the released model (recorded in DESIGN.md §9): the
+short causal conv in the mLSTM q/k path is omitted; gates use
+sigmoid/log-sigmoid stabilization rather than the exp-gate + max-tracker.
+Block cadence follows cfg.slstm_every (1.3b ~= 7 mLSTM : 1 sLSTM).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import ParamSpec, apply_norm, make_norm_params, shard_hint
+from .gla import GLAState, gla_chunked, gla_init_state, gla_step
+from .transformer import embed_params, embed_tokens, stack_specs, unembed
+
+__all__ = [
+    "xlstm_layout",
+    "xlstm_forward",
+    "xlstm_decode",
+    "xlstm_init_state",
+    "XLSTMState",
+]
+
+
+class XLSTMState(NamedTuple):
+    mlstm: GLAState          # stacked (n_mlstm, B, H, dk, dv) states
+    slstm_c: jax.Array       # (n_slstm, B, NH, dh)
+    slstm_n: jax.Array
+    slstm_h: jax.Array
+
+
+def _mlstm_params(cfg: ArchConfig) -> dict:
+    d, din = cfg.d_model, cfg.d_inner
+    nh = cfg.ssm_heads_
+    return {
+        "norm": make_norm_params(d, cfg.norm),
+        "w_in": ParamSpec((d, 2 * din), ("embed", "mlp")),       # [x_m | z gate]
+        "wq": ParamSpec((din, din), ("mlp", "heads_flat")),
+        "wk": ParamSpec((din, din), ("mlp", "heads_flat")),
+        "wv": ParamSpec((din, din), ("mlp", "heads_flat")),
+        "w_ig": ParamSpec((din, nh), ("mlp", None), init="zeros"),
+        "b_ig": ParamSpec((nh,), (None,), init="zeros"),
+        "w_fg": ParamSpec((din, nh), ("mlp", None), init="zeros"),
+        "b_fg": ParamSpec((nh,), (None,), init="ones", scale=4.0),  # decay ~ 1 at init
+        "w_out": ParamSpec((din, d), ("mlp", "embed")),
+    }
+
+
+def _slstm_params(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    nh = cfg.ssm_heads_
+    dh = d // nh
+    return {
+        "norm": make_norm_params(d, cfg.norm),
+        "w_gates": ParamSpec((d, 4 * d), ("embed", "mlp")),        # z i f o inputs
+        "r_gates": ParamSpec((nh, dh, 4 * dh), (None, None, None), scale=0.5),
+        "b_gates": ParamSpec((4 * d,), ("mlp",), init="zeros"),
+        "w_out": ParamSpec((d, d), ("embed", "embed")),
+    }
+
+
+def xlstm_layout(cfg: ArchConfig) -> dict:
+    n_s = cfg.n_layers // cfg.slstm_every if cfg.slstm_every else 0
+    n_m = cfg.n_layers - n_s
+    return {
+        **embed_params(cfg),
+        "mlstm": stack_specs(_mlstm_params(cfg), n_m),
+        "slstm": stack_specs(_slstm_params(cfg), max(n_s, 1)),
+    }
+
+
+def _mlstm_apply(lp, x, cfg: ArchConfig, state: GLAState | None, step: bool):
+    """x (B,T,d) chunked, or (B,1,d) recurrent when step=True."""
+    B, T, d = x.shape
+    nh = cfg.ssm_heads_
+    din = cfg.d_inner
+    dk = din // nh
+    h = apply_norm(x, lp["norm"], cfg.norm)
+    hm, z = jnp.split(h @ lp["w_in"], 2, axis=-1)
+    q = (hm @ lp["wq"]).reshape(B, T, nh, dk)
+    k = (hm @ lp["wk"]).reshape(B, T, nh, dk) / jnp.sqrt(dk).astype(x.dtype)
+    v = (hm @ lp["wv"]).reshape(B, T, nh, dk)
+    b_in = jax.nn.sigmoid((hm @ lp["w_ig"] + lp["b_ig"]).astype(jnp.float32))      # (B,T,NH)
+    log_a = jax.nn.log_sigmoid((hm @ lp["w_fg"] + lp["b_fg"]).astype(jnp.float32))
+    if step:
+        y, new_state = gla_step(
+            q[:, 0], k[:, 0], v[:, 0], log_a[:, 0], b_in[:, 0], state, normalize=True
+        )
+        y = y[:, None]  # (B,1,NH,dk)
+    else:
+        y, new_state = gla_chunked(q, k, v, log_a, b_in, cfg.chunk, state=state, normalize=True)
+    y = y.reshape(B, T, din) * jax.nn.silu(z)
+    return x + y @ lp["w_out"], new_state
+
+
+def _slstm_apply(lp, x, cfg: ArchConfig, state, step: bool):
+    """Sequential scalar-memory LSTM. state = (c, n, h_prev) each (B,NH,dh)."""
+    B, T, d = x.shape
+    nh = cfg.ssm_heads_
+    dh = d // nh
+    xin = apply_norm(x, lp["norm"], cfg.norm)
+    gates_in = (xin @ lp["w_gates"] + lp["b_gates"]).reshape(B, T, nh, 4 * dh)
+
+    def cell(carry, g_t):
+        c, n, h_prev = carry  # (B,NH,dh) f32
+        rec = jnp.einsum("bhd,hdg->bhg", h_prev, lp["r_gates"].astype(jnp.float32))
+        g = g_t.astype(jnp.float32) + rec
+        zr, ir, fr, orr = jnp.split(g, 4, axis=-1)
+        z = jnp.tanh(zr)
+        o = jax.nn.sigmoid(orr)
+        log_f = jax.nn.log_sigmoid(fr)
+        i = jnp.exp(jnp.minimum(ir, 10.0))
+        f = jnp.exp(log_f)
+        c_new = f * c + i * z
+        n_new = f * n + i
+        h_new = o * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+        return (c_new, n_new, h_new), h_new
+
+    if step:
+        (c, n, h), y = cell(state, gates_in[:, 0])
+        y = y[:, None]
+        new_state = (c, n, h)
+    else:
+        zero = jnp.zeros((B, nh, dh), jnp.float32)
+        init = state if state is not None else (zero, zero, zero)
+        new_state, ys = jax.lax.scan(cell, init, jnp.moveaxis(gates_in, 1, 0))
+        y = jnp.moveaxis(ys, 0, 1)  # (B,T,NH,dh)
+    y = y.reshape(B, T, d).astype(x.dtype)
+    return x + y @ lp["w_out"], new_state
+
+
+def _split_layers(cfg: ArchConfig):
+    """Group pattern: (slstm_every - 1) mLSTM blocks then 1 sLSTM block."""
+    k = cfg.slstm_every
+    n_groups = cfg.n_layers // k
+    return n_groups, k - 1
+
+
+def xlstm_forward(params: dict, tokens: jax.Array, cfg: ArchConfig, *, remat: bool = False,
+                  state: XLSTMState | None = None, return_state: bool = False):
+    x = embed_tokens(params, tokens, cfg)
+    n_groups, m_per = _split_layers(cfg)
+
+    def m_tree(g):  # mLSTM specs for group g, reshaped (n_groups, m_per, ...)
+        return jax.tree.map(lambda a: a.reshape(n_groups, m_per, *a.shape[1:])[g], params["mlstm"])
+
+    states_m = []
+    states_s = []
+    for g in range(n_groups):
+        def m_body(x, lp):
+            y, st = _mlstm_apply(lp, x, cfg, None, step=False)
+            return y, st
+
+        from .transformer import remat_wrap
+
+        fn = remat_wrap(m_body, remat)
+        x, st_m = jax.lax.scan(fn, x, m_tree(g))
+        s_lp = jax.tree.map(lambda a: a[g], params["slstm"])
+        x, st_s = _slstm_apply(s_lp, x, cfg, None, step=False)
+        states_m.append(st_m)
+        states_s.append(st_s)
+
+    logits = unembed(params, x, cfg)
+    if return_state:
+        # scan stacks per-layer states: each st_m.S is (m_per, B, NH, dk, dk)
+        mS = GLAState(
+            S=jnp.concatenate([st.S for st in states_m], axis=0),
+            n=jnp.concatenate([st.n for st in states_m], axis=0),
+        )
+        return logits, XLSTMState(
+            mlstm=mS,
+            slstm_c=jnp.stack([s[0] for s in states_s]),
+            slstm_n=jnp.stack([s[1] for s in states_s]),
+            slstm_h=jnp.stack([s[2] for s in states_s]),
+        )
+    return logits
+
+
+def xlstm_init_state(cfg: ArchConfig, batch: int) -> XLSTMState:
+    nh = cfg.ssm_heads_
+    din = cfg.d_inner
+    dk = din // nh
+    dh = cfg.d_model // nh
+    n_groups, m_per = _split_layers(cfg)
+    n_m = n_groups * m_per
+    return XLSTMState(
+        mlstm=GLAState(
+            S=jnp.zeros((n_m, batch, nh, dk, dk), jnp.float32),
+            n=jnp.zeros((n_m, batch, nh, dk), jnp.float32),
+        ),
+        slstm_c=jnp.zeros((n_groups, batch, nh, dh), jnp.float32),
+        slstm_n=jnp.zeros((n_groups, batch, nh, dh), jnp.float32),
+        slstm_h=jnp.zeros((n_groups, batch, nh, dh), jnp.float32),
+    )
+
+
+def xlstm_decode(params: dict, token: jax.Array, state: XLSTMState, pos, cfg: ArchConfig):
+    """One token. SSM decode is O(1) in context length (no KV cache)."""
+    x = embed_tokens(params, token, cfg)
+    n_groups, m_per = _split_layers(cfg)
+
+    new_mS, new_mN = [], []
+    new_c, new_n, new_h = [], [], []
+    for g in range(n_groups):
+        for j in range(m_per):
+            li = g * m_per + j
+            lp = jax.tree.map(lambda a: a.reshape(n_groups, m_per, *a.shape[1:])[g, j], params["mlstm"])
+            st = GLAState(S=state.mlstm.S[li], n=state.mlstm.n[li])
+            x, st2 = _mlstm_apply(lp, x, cfg, st, step=True)
+            new_mS.append(st2.S)
+            new_mN.append(st2.n)
+        s_lp = jax.tree.map(lambda a: a[g], params["slstm"])
+        st_s = (state.slstm_c[g], state.slstm_n[g], state.slstm_h[g])
+        x, (c, n, h) = _slstm_apply(s_lp, x, cfg, st_s, step=True)
+        new_c.append(c)
+        new_n.append(n)
+        new_h.append(h)
+
+    logits = unembed(params, x, cfg)
+    del pos
+    new_state = XLSTMState(
+        mlstm=GLAState(S=jnp.stack(new_mS), n=jnp.stack(new_mN)),
+        slstm_c=jnp.stack(new_c),
+        slstm_n=jnp.stack(new_n),
+        slstm_h=jnp.stack(new_h),
+    )
+    return logits, new_state

@@ -1,0 +1,214 @@
+"""Unified model API over the six families.
+
+Every architecture exposes the same surface:
+
+    api = build_model(cfg)
+    params = api.init_params(key)          # or api.abstract_params()
+    logits = api.forward(params, batch)    # train / prefill math
+    logits, cache = api.prefill(params, batch, max_seq)
+    cache = api.init_cache(batch_size, max_seq)
+    logits, cache = api.decode(params, token, cache, pos)
+    batch = api.input_specs(shape)         # ShapeDtypeStructs for dry-run
+
+``batch`` is a dict with "tokens" (B, T) plus family extras:
+encdec -> "frames" (stub audio frontend), vlm -> "img_feats" (stub ViT).
+MoE forward returns (logits, aux); others return logits (aux=0 handled in
+train/loss).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from .attention import KVCache
+from .common import DTYPES, abstract, logical_axes_tree, materialize
+from . import encdec as _encdec
+from . import mamba as _mamba
+from . import moe_lm as _moe
+from . import transformer as _dense
+from . import vlm as _vlm
+from . import xlstm as _xlstm
+
+__all__ = ["ModelApi", "build_model"]
+
+
+@dataclass(frozen=True)
+class ModelApi:
+    cfg: ArchConfig
+    layout: Dict[str, Any]
+    forward: Callable  # (params, batch, remat=False) -> logits | (logits, aux)
+    prefill: Callable  # (params, batch) -> (logits, cache)
+    decode: Callable   # (params, token, cache, pos) -> (logits, cache)
+    init_cache: Callable  # (batch_size, max_seq) -> cache pytree
+
+    @property
+    def dtype(self):
+        return DTYPES[self.cfg.dtype]
+
+    def init_params(self, key: jax.Array):
+        return materialize(key, self.layout, self.dtype)
+
+    def abstract_params(self):
+        return abstract(self.layout, self.dtype)
+
+    def param_logical_axes(self):
+        return logical_axes_tree(self.layout)
+
+    def n_params(self) -> int:
+        import numpy as np
+
+        return int(
+            sum(np.prod(s.shape) for s in jax.tree.leaves(
+                self.layout, is_leaf=lambda x: hasattr(x, "axes") and hasattr(x, "shape")))
+        )
+
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for every model input of this shape."""
+        cfg = self.cfg
+        B, T = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind in ("train", "prefill"):
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((B, T), i32),
+            }
+            if shape.kind == "train":
+                specs["labels"] = jax.ShapeDtypeStruct((B, T), i32)
+            if cfg.family == "encdec":
+                specs["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model), self.dtype)
+            if cfg.family == "vlm":
+                specs["img_feats"] = jax.ShapeDtypeStruct((B, cfg.n_img_tokens, cfg.d_model), self.dtype)
+            return specs
+        # decode: one new token against a seq_len-deep cache/state
+        cache = jax.eval_shape(lambda: self.init_cache(B, T))
+        return {
+            "token": jax.ShapeDtypeStruct((B, 1), i32),
+            "cache": cache,
+            "pos": jax.ShapeDtypeStruct((), i32),
+        }
+
+
+def _batch_extras(cfg: ArchConfig, batch: dict) -> tuple:
+    if cfg.family == "encdec":
+        return (batch["frames"],)
+    if cfg.family == "vlm":
+        return (batch["img_feats"],)
+    return ()
+
+
+def build_model(cfg: ArchConfig) -> ModelApi:
+    fam = cfg.family
+    dtype = DTYPES[cfg.dtype]
+
+    if fam in ("dense",):
+        layout = _dense.dense_lm_layout(cfg)
+
+        def forward(params, batch, remat=False):
+            return _dense.dense_lm_forward(params, batch["tokens"], cfg, remat=remat)
+
+        def prefill(params, batch):
+            logits, kvs = _dense.dense_lm_forward(params, batch["tokens"], cfg, return_cache=True)
+            return logits, KVCache(*kvs)
+
+        def init_cache(batch_size, max_seq):
+            from .attention import init_kv_cache
+
+            return init_kv_cache(cfg, batch_size, max_seq, cfg.n_layers, dtype)
+
+        def decode(params, token, cache, pos):
+            return _dense.dense_lm_decode(params, token, cache, pos, cfg)
+
+    elif fam == "moe":
+        layout = _moe.moe_lm_layout(cfg)
+
+        def forward(params, batch, remat=False):
+            return _moe.moe_lm_forward(params, batch["tokens"], cfg, remat=remat)
+
+        def prefill(params, batch):
+            logits, _aux, kvs = _moe.moe_lm_forward(params, batch["tokens"], cfg, return_cache=True)
+            return logits, KVCache(*kvs)
+
+        def init_cache(batch_size, max_seq):
+            from .attention import init_kv_cache
+
+            return init_kv_cache(cfg, batch_size, max_seq, cfg.n_layers, dtype)
+
+        def decode(params, token, cache, pos):
+            return _moe.moe_lm_decode(params, token, cache, pos, cfg)
+
+    elif fam == "ssm":
+        layout = _xlstm.xlstm_layout(cfg)
+
+        def forward(params, batch, remat=False):
+            return _xlstm.xlstm_forward(params, batch["tokens"], cfg, remat=remat)
+
+        def prefill(params, batch):
+            return _xlstm.xlstm_forward(params, batch["tokens"], cfg, return_state=True)
+
+        def init_cache(batch_size, max_seq):
+            del max_seq  # recurrent state: O(1) in context length
+            return _xlstm.xlstm_init_state(cfg, batch_size)
+
+        def decode(params, token, cache, pos):
+            return _xlstm.xlstm_decode(params, token, cache, pos, cfg)
+
+    elif fam == "hybrid":
+        layout = _mamba.zamba_layout(cfg)
+
+        def forward(params, batch, remat=False):
+            return _mamba.zamba_forward(params, batch["tokens"], cfg, remat=remat)
+
+        def prefill(params, batch):
+            return _mamba.zamba_forward(params, batch["tokens"], cfg, return_state=True)
+
+        def init_cache(batch_size, max_seq):
+            return _mamba.zamba_init_state(cfg, batch_size, max_seq, dtype)
+
+        def decode(params, token, cache, pos):
+            return _mamba.zamba_decode(params, token, cache, pos, cfg)
+
+    elif fam == "encdec":
+        layout = _encdec.encdec_layout(cfg)
+
+        def forward(params, batch, remat=False):
+            return _encdec.encdec_forward(params, batch["tokens"], batch["frames"], cfg, remat=remat)
+
+        def prefill(params, batch):
+            logits, (kvs, enc_out) = _encdec.encdec_forward(
+                params, batch["tokens"], batch["frames"], cfg, return_cache=True
+            )
+            return logits, _encdec.EncDecCache(self_kv=KVCache(*kvs), enc_out=enc_out)
+
+        def init_cache(batch_size, max_seq):
+            return _encdec.encdec_init_cache(cfg, batch_size, max_seq, dtype)
+
+        def decode(params, token, cache, pos):
+            return _encdec.encdec_decode(params, token, cache, pos, cfg)
+
+    elif fam == "vlm":
+        layout = _vlm.vlm_layout(cfg)
+
+        def forward(params, batch, remat=False):
+            return _vlm.vlm_forward(params, batch["tokens"], batch["img_feats"], cfg, remat=remat)
+
+        def prefill(params, batch):
+            logits, kv = _vlm.vlm_forward(
+                params, batch["tokens"], batch["img_feats"], cfg, return_cache=True
+            )
+            return logits, _vlm.VLMCache(self_kv=kv, img_feats=batch["img_feats"])
+
+        def init_cache(batch_size, max_seq):
+            return _vlm.vlm_init_cache(cfg, batch_size, max_seq, dtype)
+
+        def decode(params, token, cache, pos):
+            return _vlm.vlm_decode(params, token, cache, pos, cfg)
+
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+
+    return ModelApi(
+        cfg=cfg, layout=layout, forward=forward, prefill=prefill, decode=decode, init_cache=init_cache
+    )

@@ -1,0 +1,3 @@
+from .fault_tolerance import CheckpointManager, StragglerTracker, run_with_recovery
+
+__all__ = ["CheckpointManager", "StragglerTracker", "run_with_recovery"]

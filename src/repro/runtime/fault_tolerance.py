@@ -1,0 +1,124 @@
+"""Fault-tolerance runtime: checkpoint manager + straggler loop + elastic.
+
+Designed for the 1000+-node regime:
+
+* ``CheckpointManager`` — periodic async saves (a background thread, so
+  the step loop never blocks on disk — the paper's hide-the-copy move
+  applied to checkpoints), retention window, crash-safe resume
+  (restore-or-init), and resume-exactness thanks to the deterministic
+  data pipeline keyed by step.
+* ``run_with_recovery`` — supervised step loop: on a step failure
+  (preemption, injected fault) it restores the newest checkpoint and
+  replays from there.
+* straggler mitigation — ``core.perfmodel.StragglerTracker``; for the
+  solver it feeds re-decomposition weights (the paper's performance
+  model), for training it flags hosts for the scheduler.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+
+from ..ckpt.checkpoint import available_steps, latest_step, restore_checkpoint, save_checkpoint
+from ..core.perfmodel import StragglerTracker  # re-export for runtime users
+
+__all__ = ["CheckpointManager", "run_with_recovery", "StragglerTracker"]
+
+
+@dataclass
+class CheckpointManager:
+    directory: str
+    save_every: int = 100
+    keep: int = 3
+    async_save: bool = True
+    _thread: Optional[threading.Thread] = field(default=None, repr=False)
+    _error: Optional[BaseException] = field(default=None, repr=False)
+
+    def maybe_save(self, step: int, state: Any, force: bool = False) -> bool:
+        if not force and (self.save_every <= 0 or step % self.save_every != 0):
+            return False
+        self.wait()  # one in-flight save at a time
+        state = jax.tree.map(lambda x: x, state)  # snapshot the pytree refs
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, state)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        if self.async_save:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+            self._raise_if_failed()
+        return True
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self._raise_if_failed()
+
+    def _raise_if_failed(self):
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self):
+        import shutil, os
+
+        steps = available_steps(self.directory)
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s}"), ignore_errors=True)
+
+    def restore_latest(self, template: Any, shardings: Any = None):
+        """Returns (state, step) or (None, None) when no checkpoint exists."""
+        self.wait()
+        s = latest_step(self.directory)
+        if s is None:
+            return None, None
+        return restore_checkpoint(self.directory, s, template, shardings), s
+
+
+def run_with_recovery(
+    step_fn: Callable[[Any, int], Any],
+    init_state: Any,
+    n_steps: int,
+    manager: CheckpointManager,
+    *,
+    start_step: int = 0,
+    max_restarts: int = 3,
+    on_restore: Optional[Callable[[int], None]] = None,
+):
+    """Supervised loop: state = step_fn(state, step). On an exception the
+    newest checkpoint is restored and the loop replays from its step —
+    with the deterministic pipeline this is an exact resume."""
+    state = init_state
+    step = start_step
+    restarts = 0
+    while step < n_steps:
+        try:
+            state = step_fn(state, step)
+            step += 1
+            manager.maybe_save(step, state)
+        except KeyboardInterrupt:
+            raise
+        except Exception:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            restored, s = manager.restore_latest(jax.eval_shape(lambda: state))
+            if restored is None:
+                state, step = init_state, start_step
+            else:
+                state, step = restored, s
+            if on_restore is not None:
+                on_restore(step)
+    manager.maybe_save(step, state, force=True)
+    manager.wait()
+    return state, step

@@ -1,0 +1,3 @@
+from .engine import ServeConfig, generate, make_decode_step
+
+__all__ = ["ServeConfig", "generate", "make_decode_step"]

@@ -1,0 +1,102 @@
+"""Batched serving engine: prefill once, decode greedily/with temperature.
+
+The decode loop is a single jitted ``lax.while_loop`` (token-at-a-time with
+the family's cache/state), so serving lowers to one XLA program — the form
+the dry-run compiles for decode_32k / long_500k.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.zoo import ModelApi
+
+__all__ = ["ServeConfig", "generate", "make_decode_step"]
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0  # 0 => greedy
+    eos_id: int = -1          # -1 => never stop early
+
+
+def make_decode_step(api: ModelApi):
+    """decode_step(params, token, cache, pos) — the serve_step the dry-run
+    lowers for decode shapes."""
+
+    def decode_step(params, token, cache, pos):
+        return api.decode(params, token, cache, pos)
+
+    return decode_step
+
+
+def generate(api: ModelApi, params, batch: dict, sc: ServeConfig = ServeConfig(), key=None):
+    """Prefill on batch["tokens"] then generate sc.max_new_tokens more.
+
+    Returns (tokens (B, T+new), per-step logits of the generated part)."""
+    cfg = api.cfg
+    B, T = batch["tokens"].shape
+    max_seq = T + sc.max_new_tokens
+    if key is None:
+        key = jax.random.PRNGKey(0)
+
+    # prefill: run the full forward once, build the cache at max_seq length
+    logits, pf_cache = api.prefill(params, batch)
+    cache = api.init_cache(B, max_seq)
+    cache = _copy_prefill(api, cache, pf_cache, T, batch)
+
+    last = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+    def sample(lg, k):
+        if sc.temperature <= 0.0:
+            return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(k, lg / sc.temperature).astype(jnp.int32)
+
+    def body(carry):
+        i, tok, cache, out, key, done = carry
+        lg, cache = api.decode(params, tok[:, None], cache, T + i)
+        key, sub = jax.random.split(key)
+        nxt = sample(lg[:, 0].astype(jnp.float32), sub)
+        nxt = jnp.where(done, tok, nxt)
+        done = done | (nxt == sc.eos_id)
+        out = out.at[:, i].set(nxt)
+        return i + 1, nxt, cache, out, key, done
+
+    def cond(carry):
+        i, _, _, _, _, done = carry
+        return (i < sc.max_new_tokens) & ~jnp.all(done)
+
+    out0 = jnp.zeros((B, sc.max_new_tokens), jnp.int32)
+    done0 = jnp.zeros((B,), bool)
+    _, _, _, out, _, _ = jax.lax.while_loop(cond, body, (0, last, cache, out0, key, done0))
+    return jnp.concatenate([batch["tokens"], last[:, None], out[:, :-1]], axis=1)
+
+
+def _copy_prefill(api: ModelApi, cache, pf_cache, T: int, batch: dict):
+    """Splice prefill-produced KV/state into a max_seq-sized cache."""
+    cfg = api.cfg
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        k = jax.lax.dynamic_update_slice(cache.k, pf_cache.k, (0, 0, 0, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache.v, pf_cache.v, (0, 0, 0, 0, 0))
+        return type(cache)(k=k, v=v)
+    if fam == "ssm":
+        return pf_cache  # recurrent state has no sequence axis
+    if fam == "hybrid":
+        big = cache.attn_kv
+        k = jax.lax.dynamic_update_slice(big.k, pf_cache.attn_kv.k, (0, 0, 0, 0, 0))
+        v = jax.lax.dynamic_update_slice(big.v, pf_cache.attn_kv.v, (0, 0, 0, 0, 0))
+        return pf_cache._replace(attn_kv=type(big)(k=k, v=v))
+    if fam == "encdec":
+        k = jax.lax.dynamic_update_slice(cache.self_kv.k, pf_cache.self_kv.k, (0, 0, 0, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache.self_kv.v, pf_cache.self_kv.v, (0, 0, 0, 0, 0))
+        return cache._replace(self_kv=type(cache.self_kv)(k=k, v=v), enc_out=pf_cache.enc_out)
+    if fam == "vlm":
+        k = jax.lax.dynamic_update_slice(cache.self_kv.k, pf_cache.self_kv.k, (0, 0, 0, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache.self_kv.v, pf_cache.self_kv.v, (0, 0, 0, 0, 0))
+        return cache._replace(self_kv=type(cache.self_kv)(k=k, v=v), img_feats=batch["img_feats"])
+    raise ValueError(fam)

@@ -1,0 +1,50 @@
+from .formats import (
+    BellMatrix,
+    CSRHost,
+    DIAMatrix,
+    bell_from_csr,
+    csr_from_dia,
+    csr_from_dense,
+    dia_from_csr,
+)
+from .partition import (
+    ShardedDIA,
+    balanced_nnz,
+    balanced_rows,
+    partition_stats,
+    shard_dia,
+    shard_vector,
+    unshard_vector,
+)
+from .spmv import shifted, spmv, spmv_bell, spmv_dia
+from .stencil import poisson7, poisson27, poisson125, poisson_dia, stencil_offsets
+from .synthetic import TABLE1, synthetic_spd_dia, table1_matrix
+
+__all__ = [
+    "BellMatrix",
+    "CSRHost",
+    "DIAMatrix",
+    "ShardedDIA",
+    "TABLE1",
+    "balanced_nnz",
+    "balanced_rows",
+    "bell_from_csr",
+    "csr_from_dense",
+    "csr_from_dia",
+    "dia_from_csr",
+    "partition_stats",
+    "poisson7",
+    "poisson27",
+    "poisson125",
+    "poisson_dia",
+    "shard_dia",
+    "shard_vector",
+    "shifted",
+    "spmv",
+    "spmv_bell",
+    "spmv_dia",
+    "stencil_offsets",
+    "synthetic_spd_dia",
+    "table1_matrix",
+    "unshard_vector",
+]

@@ -1,0 +1,223 @@
+"""Sparse matrix containers used across the solver stack.
+
+TPU-friendly formats:
+
+* ``DIAMatrix`` — diagonal (banded) storage. The natural format for the
+  paper's Poisson stencil matrices (7/27/125-point): every diagonal is a
+  dense vector, SPMV is a sum of shifted elementwise multiplies that maps
+  directly onto the VPU with no gathers. Offsets are static metadata so the
+  set of shifts is known at trace time.
+* ``BellMatrix`` — Block-ELLPACK: every row padded to a fixed number of
+  slots ``R`` (column index + value). General sparsity with a regular,
+  vectorizable layout (the TPU answer to CSR's ragged rows).
+* ``CSRHost`` — host-side (numpy) CSR used only for construction,
+  partitioning and conversion; never traced.
+
+All device containers are registered dataclass pytrees: array leaves are
+data, shapes/offsets are static metadata.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "DIAMatrix",
+    "BellMatrix",
+    "CSRHost",
+    "dia_from_csr",
+    "bell_from_csr",
+    "csr_from_dia",
+]
+
+
+@partial(jax.tree_util.register_dataclass, data_fields=["data"], meta_fields=["offsets", "n"])
+@dataclass(frozen=True)
+class DIAMatrix:
+    """Banded matrix in diagonal storage.
+
+    ``data[j, i] = A[i, i + offsets[j]]`` (row-major banded convention).
+    Entries whose column falls outside ``[0, n)`` are stored as 0 and never
+    read. ``offsets`` is a static tuple so SPMV unrolls into static shifts.
+    """
+
+    data: jax.Array  # (n_diags, n)
+    offsets: Tuple[int, ...]
+    n: int
+
+    @property
+    def n_diags(self) -> int:
+        return len(self.offsets)
+
+    @property
+    def bandwidth(self) -> int:
+        return max(abs(o) for o in self.offsets)
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    @property
+    def shape(self):
+        return (self.n, self.n)
+
+    def diagonal(self) -> jax.Array:
+        j = self.offsets.index(0)
+        return self.data[j]
+
+    def nnz(self) -> int:
+        """Structural nnz (band entries inside the matrix)."""
+        total = 0
+        for o in self.offsets:
+            total += self.n - abs(o)
+        return total
+
+    def with_dtype(self, dtype) -> "DIAMatrix":
+        return DIAMatrix(self.data.astype(dtype), self.offsets, self.n)
+
+
+@partial(jax.tree_util.register_dataclass, data_fields=["cols", "vals"], meta_fields=["n"])
+@dataclass(frozen=True)
+class BellMatrix:
+    """Block-ELLPACK: fixed ``R`` slots per row.
+
+    Padding slots point at column 0 with value 0 (safe gather target).
+    """
+
+    cols: jax.Array  # (n, R) int32
+    vals: jax.Array  # (n, R)
+    n: int
+
+    @property
+    def slots_per_row(self) -> int:
+        return self.cols.shape[1]
+
+    @property
+    def dtype(self):
+        return self.vals.dtype
+
+    @property
+    def shape(self):
+        return (self.n, self.n)
+
+    def diagonal(self) -> jax.Array:
+        row = jnp.arange(self.n, dtype=self.cols.dtype)[:, None]
+        mask = self.cols == row
+        return (self.vals * mask).sum(axis=1)
+
+    def nnz(self) -> int:
+        return int(self.cols.shape[0] * self.cols.shape[1])
+
+    def with_dtype(self, dtype) -> "BellMatrix":
+        return BellMatrix(self.cols, self.vals.astype(dtype), self.n)
+
+
+@dataclass(frozen=True)
+class CSRHost:
+    """Host-side CSR (numpy). Construction / partitioning only."""
+
+    indptr: np.ndarray  # (n+1,) int64
+    indices: np.ndarray  # (nnz,) int64
+    data: np.ndarray  # (nnz,)
+    n: int
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indptr[-1])
+
+    def row_nnz(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+    def diagonal(self) -> np.ndarray:
+        d = np.zeros(self.n, dtype=self.data.dtype)
+        for i in range(self.n):
+            lo, hi = self.indptr[i], self.indptr[i + 1]
+            cols = self.indices[lo:hi]
+            hit = np.nonzero(cols == i)[0]
+            if hit.size:
+                d[i] = self.data[lo + hit[0]]
+        return d
+
+    def to_dense(self) -> np.ndarray:
+        A = np.zeros((self.n, self.n), dtype=self.data.dtype)
+        for i in range(self.n):
+            lo, hi = self.indptr[i], self.indptr[i + 1]
+            A[i, self.indices[lo:hi]] = self.data[lo:hi]
+        return A
+
+
+def csr_from_dense(A: np.ndarray) -> CSRHost:
+    n = A.shape[0]
+    indptr = [0]
+    indices = []
+    data = []
+    for i in range(n):
+        nz = np.nonzero(A[i])[0]
+        indices.extend(nz.tolist())
+        data.extend(A[i, nz].tolist())
+        indptr.append(len(indices))
+    return CSRHost(
+        np.asarray(indptr, dtype=np.int64),
+        np.asarray(indices, dtype=np.int64),
+        np.asarray(data, dtype=A.dtype),
+        n,
+    )
+
+
+def dia_from_csr(csr: CSRHost) -> DIAMatrix:
+    """Convert host CSR to DIA. Offsets = every distinct (col - row)."""
+    n = csr.n
+    rows = np.repeat(np.arange(n), csr.row_nnz())
+    offs = csr.indices - rows
+    uniq = np.unique(offs)
+    data = np.zeros((len(uniq), n), dtype=csr.data.dtype)
+    pos = {int(o): j for j, o in enumerate(uniq)}
+    for r, c, v in zip(rows, csr.indices, csr.data):
+        data[pos[int(c - r)], r] = v
+    return DIAMatrix(jnp.asarray(data), tuple(int(o) for o in uniq), n)
+
+
+def csr_from_dia(dia: DIAMatrix) -> CSRHost:
+    n = dia.n
+    data_np = np.asarray(dia.data)
+    rows_all, cols_all, vals_all = [], [], []
+    for j, o in enumerate(dia.offsets):
+        lo = max(0, -o)
+        hi = min(n, n - o)
+        r = np.arange(lo, hi)
+        rows_all.append(r)
+        cols_all.append(r + o)
+        vals_all.append(data_np[j, lo:hi])
+    rows = np.concatenate(rows_all)
+    cols = np.concatenate(cols_all)
+    vals = np.concatenate(vals_all)
+    order = np.lexsort((cols, rows))
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    keep = vals != 0
+    rows, cols, vals = rows[keep], cols[keep], vals[keep]
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.add.at(indptr, rows + 1, 1)
+    indptr = np.cumsum(indptr)
+    return CSRHost(indptr, cols.astype(np.int64), vals, n)
+
+
+def bell_from_csr(csr: CSRHost, slots_per_row: int | None = None) -> BellMatrix:
+    n = csr.n
+    row_nnz = csr.row_nnz()
+    R = int(slots_per_row or row_nnz.max() or 1)
+    if row_nnz.max() > R:
+        raise ValueError(f"slots_per_row={R} < max row nnz {row_nnz.max()}")
+    cols = np.zeros((n, R), dtype=np.int32)
+    vals = np.zeros((n, R), dtype=csr.data.dtype)
+    for i in range(n):
+        lo, hi = csr.indptr[i], csr.indptr[i + 1]
+        k = hi - lo
+        cols[i, :k] = csr.indices[lo:hi]
+        vals[i, :k] = csr.data[lo:hi]
+    return BellMatrix(jnp.asarray(cols), jnp.asarray(vals), n)

@@ -1,0 +1,46 @@
+"""Reference (pure-jnp) SPMV implementations for every device format.
+
+These are the oracles the Pallas kernels are validated against and the
+fallback path on platforms without Pallas support.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .formats import BellMatrix, DIAMatrix
+
+__all__ = ["spmv", "spmv_dia", "spmv_bell", "shifted"]
+
+
+def shifted(x: jax.Array, offset: int) -> jax.Array:
+    """x shifted by a static offset with zero fill: out[i] = x[i+offset]."""
+    n = x.shape[0]
+    if offset == 0:
+        return x
+    if offset > 0:
+        return jnp.concatenate([x[offset:], jnp.zeros((offset,), x.dtype)])
+    return jnp.concatenate([jnp.zeros((-offset,), x.dtype), x[:offset]])
+
+
+def spmv_dia(A: DIAMatrix, x: jax.Array) -> jax.Array:
+    """y[i] = sum_j data[j, i] * x[i + offsets[j]] (zero outside [0, n))."""
+    y = jnp.zeros_like(x)
+    for j, o in enumerate(A.offsets):
+        y = y + A.data[j] * shifted(x, o)
+    return y
+
+
+def spmv_bell(A: BellMatrix, x: jax.Array) -> jax.Array:
+    gathered = x[A.cols]  # (n, R)
+    return (A.vals * gathered).sum(axis=1)
+
+
+def spmv(A, x: jax.Array) -> jax.Array:
+    if isinstance(A, DIAMatrix):
+        return spmv_dia(A, x)
+    if isinstance(A, BellMatrix):
+        return spmv_bell(A, x)
+    if isinstance(A, jax.Array) or hasattr(A, "ndim"):
+        return A @ x
+    raise TypeError(f"unsupported matrix type {type(A)}")

@@ -1,0 +1,95 @@
+"""Stencil matrix generators (the paper's Poisson problems).
+
+The paper evaluates on 125-point Poisson matrices (5x5x5 stencil,
+nnz/N ~ 122) plus SuiteSparse matrices. We generate the stencil operators
+directly in DIA form: a d-dimensional grid of side ``n`` with a
+``(2*radius+1)**d``-point stencil produces one diagonal per stencil tap at
+offset ``sum_k tap_k * n**k``.
+
+SPD guarantee: off-diagonal taps are ``-1``, the center tap is
+``(#neighbors) + sigma`` with ``sigma > 0`` — a symmetrically diagonally
+dominant matrix with positive diagonal, hence SPD (graph Laplacian + sigma*I
+up to boundary truncation, which only strengthens dominance).
+"""
+from __future__ import annotations
+
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import DIAMatrix
+
+__all__ = ["poisson_dia", "poisson125", "poisson27", "poisson7", "stencil_offsets"]
+
+
+def stencil_offsets(dim: int, n: int, radius: int) -> list[int]:
+    """Linearized offsets of a dense (2r+1)^dim stencil on an n^dim grid."""
+    offs = []
+    for tap in itertools.product(range(-radius, radius + 1), repeat=dim):
+        off = 0
+        for k, t in enumerate(tap):
+            off += t * n**k
+        offs.append(off)
+    return sorted(set(offs))
+
+
+def poisson_dia(dim: int, n: int, radius: int, sigma: float = 1.0, dtype=jnp.float32) -> DIAMatrix:
+    """SPD stencil operator on an ``n**dim`` grid in DIA storage.
+
+    Boundary handling is Dirichlet truncation *in grid coordinates*: a tap
+    is dropped when any coordinate leaves the grid (not merely the linear
+    index — this avoids spurious wraparound couplings between grid rows).
+    """
+    N = n**dim
+    taps = [t for t in itertools.product(range(-radius, radius + 1), repeat=dim) if any(t)]
+    offsets = stencil_offsets(dim, n, radius)
+    pos = {o: j for j, o in enumerate(offsets)}
+    data = np.zeros((len(offsets), N), dtype=np.float64)
+
+    # coordinates of every grid point, axis-major matching the offset formula
+    idx = np.arange(N)
+    coords = [(idx // n**k) % n for k in range(dim)]
+
+    for tap in taps:
+        off = sum(t * n**k for k, t in enumerate(tap))
+        valid = np.ones(N, dtype=bool)
+        for k, t in enumerate(tap):
+            c = coords[k] + t
+            valid &= (c >= 0) & (c < n)
+        data[pos[off], valid] = -1.0
+
+    # center: dominance over the actual (boundary-truncated) row sums
+    center = -data.sum(axis=0) + sigma
+    data[pos[0]] = center
+    return DIAMatrix(jnp.asarray(data, dtype=dtype), tuple(offsets), N)
+
+
+def poisson7(n: int, sigma: float = 1.0, dtype=jnp.float32) -> DIAMatrix:
+    """3-D 7-point stencil (radius-1 star ~ classic Laplacian; we use the
+    dense 27-pt box's star subset via radius=1 box minus corners is not
+    needed for the paper — we keep the dense box generator and expose the
+    7-pt as the 1-radius *star*)."""
+    N = n**3
+    offsets = sorted({0, 1, -1, n, -n, n * n, -(n * n)})
+    pos = {o: j for j, o in enumerate(offsets)}
+    data = np.zeros((len(offsets), N), dtype=np.float64)
+    idx = np.arange(N)
+    coords = [(idx // n**k) % n for k in range(3)]
+    for k in range(3):
+        for t in (-1, 1):
+            off = t * n**k
+            c = coords[k] + t
+            valid = (c >= 0) & (c < n)
+            data[pos[off], valid] = -1.0
+    data[pos[0]] = -data.sum(axis=0) + sigma
+    return DIAMatrix(jnp.asarray(data, dtype=dtype), tuple(offsets), N)
+
+
+def poisson27(n: int, sigma: float = 1.0, dtype=jnp.float32) -> DIAMatrix:
+    return poisson_dia(3, n, radius=1, sigma=sigma, dtype=dtype)
+
+
+def poisson125(n: int, sigma: float = 1.0, dtype=jnp.float32) -> DIAMatrix:
+    """The paper's 125-point (5x5x5) Poisson-class operator, nnz/N ~ 122."""
+    return poisson_dia(3, n, radius=2, sigma=sigma, dtype=dtype)

@@ -1,0 +1,36 @@
+"""Cross-entropy loss with the paper-technique metric packing.
+
+``packed_metrics`` returns ONE vector [sum_nll, token_count, grad_norm_sq,
+aux] so the training loop issues a single reduction per step instead of
+one per metric — the Hybrid-PIPECG-2 move (shrink many small syncs into
+one) applied to training telemetry.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ce_loss", "next_token_loss"]
+
+
+def ce_loss(logits: jax.Array, labels: jax.Array, *, z_loss: float = 0.0):
+    """Mean CE over all positions. logits (B,T,V) any float; labels (B,T).
+
+    Written as lse - label_logit with an iota/select reduction (NOT
+    take_along_axis): under a vocab-sharded logits layout the select fuses
+    into the vocab-axis reduction and GSPMD finishes with a tiny psum,
+    whereas a gather on the sharded axis would all-gather the full logits.
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)  # (B,T) — sharded vocab reduce
+    iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, len(lf.shape) - 1)
+    label_logit = jnp.sum(jnp.where(iota == labels[..., None], lf, 0.0), axis=-1)
+    loss = (lse - label_logit).mean()
+    if z_loss > 0.0:
+        loss = loss + z_loss * jnp.mean(lse**2)
+    return loss
+
+
+def next_token_loss(logits: jax.Array, tokens: jax.Array, *, z_loss: float = 0.0):
+    """Shifted LM objective: predict tokens[t+1] from logits[t]."""
+    return ce_loss(logits[:, :-1], tokens[:, 1:], z_loss=z_loss)

@@ -1,0 +1,116 @@
+"""AdamW with single-pass (fused) update and pipelined gradient clipping.
+
+Fusion: ``apply_fused=True`` routes each parameter tensor through the
+Pallas fused AdamW kernel (kernels/fused_adam) — one HBM pass instead of
+~8, the paper's §V-B transformation applied to the optimizer.
+
+Pipelined clip: the PIPECG move applied to the optimizer. Standard global-
+norm clipping serializes reduce(|g|^2) -> scale -> update. With
+``pipelined_clip=True`` the clip scale uses the PREVIOUS step's norm (kept
+in the optimizer state), so this step's reduction overlaps the update and
+is consumed one step late — same one-iteration-slack trick as Alg. 2.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "AdamWState", "adamw_init", "adamw_update", "global_norm"]
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 0.0       # 0 = off
+    pipelined_clip: bool = False  # use previous step's global norm
+    apply_fused: bool = False     # Pallas fused kernel (single-device path)
+
+
+class AdamWState(NamedTuple):
+    m: dict
+    v: dict
+    step: jax.Array        # int32
+    prev_norm: jax.Array   # float32, previous step's grad norm (pipelined clip)
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(
+        m=zeros,
+        v=jax.tree.map(jnp.copy, zeros),
+        step=jnp.int32(0),
+        prev_norm=jnp.float32(1.0),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(tree))
+    )
+
+
+def _tree_update(params, grads, m, v, cfg: AdamWConfig, step, lr):
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mm, vv):
+        gf = g.astype(jnp.float32)
+        m_n = b1 * mm + (1 - b1) * gf
+        v_n = b2 * vv + (1 - b2) * gf * gf
+        mhat = m_n / bc1
+        vhat = v_n / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_n, v_n
+
+    out = jax.tree.map(upd, params, grads, m, v)
+    flat, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    ps = jax.tree.unflatten(treedef, [t[0] for t in flat])
+    ms = jax.tree.unflatten(treedef, [t[1] for t in flat])
+    vs = jax.tree.unflatten(treedef, [t[2] for t in flat])
+    return ps, ms, vs
+
+
+def _fused_update(params, grads, m, v, cfg: AdamWConfig, step, lr):
+    from ..kernels.fused_adam import fused_adamw
+
+    def upd(p, g, mm, vv):
+        sh = p.shape
+        p2, m2, v2 = fused_adamw(
+            p.reshape(-1), g.reshape(-1), mm.reshape(-1), vv.reshape(-1),
+            lr=lr, b1=cfg.b1, b2=cfg.b2, eps=cfg.eps, wd=cfg.weight_decay,
+            step=step.astype(jnp.float32),
+        )
+        return p2.reshape(sh), m2.reshape(sh), v2.reshape(sh)
+
+    out = jax.tree.map(upd, params, grads, m, v)
+    flat, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    ps = jax.tree.unflatten(treedef, [t[0] for t in flat])
+    ms = jax.tree.unflatten(treedef, [t[1] for t in flat])
+    vs = jax.tree.unflatten(treedef, [t[2] for t in flat])
+    return ps, ms, vs
+
+
+def adamw_update(params, grads, state: AdamWState, cfg: AdamWConfig, lr=None):
+    """Returns (new_params, new_state, metrics dict)."""
+    step = state.step + 1
+    lr = jnp.float32(cfg.lr if lr is None else lr)
+    gnorm = global_norm(grads)
+
+    if cfg.clip_norm > 0.0:
+        ref = state.prev_norm if cfg.pipelined_clip else gnorm
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(ref, 1e-9))
+        grads = jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads)
+
+    impl = _fused_update if cfg.apply_fused else _tree_update
+    new_p, new_m, new_v = impl(params, grads, state.m, state.v, cfg, step, lr)
+    new_state = AdamWState(m=new_m, v=new_v, step=step, prev_norm=gnorm)
+    return new_p, new_state, {"grad_norm": gnorm, "lr": lr}

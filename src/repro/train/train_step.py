@@ -1,0 +1,115 @@
+"""The jit-able train step: loss -> grad -> (clipped) AdamW.
+
+Structured so the paper's execution ideas are visible in the lowered HLO:
+
+* ONE packed metrics vector (loss, aux, grad-norm^2, token count) — any
+  cross-replica reduction of telemetry happens once per step (h2 move);
+* optional pipelined clip — the clip scale consumes the PREVIOUS step's
+  grad norm so the current reduction overlaps the weight update (the
+  PIPECG one-step-slack move);
+* optional microbatching (gradient accumulation via lax.scan) and remat
+  for memory headroom at scale.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.zoo import ModelApi
+from .loss import next_token_loss
+from .optimizer import AdamWConfig, AdamWState, adamw_init, adamw_update
+
+__all__ = ["TrainState", "TrainConfig", "make_train_step", "init_train_state"]
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    remat: bool = False
+    microbatches: int = 1  # gradient accumulation factor
+    z_loss: float = 0.0
+    aux_weight: float = 0.01  # MoE load-balance loss weight
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: AdamWState
+    step: jax.Array
+
+
+def init_train_state(api: ModelApi, key: jax.Array) -> TrainState:
+    params = api.init_params(key)
+    return TrainState(params=params, opt=adamw_init(params), step=jnp.int32(0))
+
+
+def abstract_train_state(api: ModelApi) -> TrainState:
+    """ShapeDtypeStruct train state for dry-run lowering (no allocation)."""
+    return jax.eval_shape(lambda: init_train_state(api, jax.random.PRNGKey(0)))
+
+
+def make_train_step(
+    api: ModelApi,
+    tc: TrainConfig = TrainConfig(),
+    lr_schedule: Optional[Callable] = None,
+) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    cfg = api.cfg
+
+    def loss_fn(params, batch):
+        out = api.forward(params, batch, remat=tc.remat)
+        if isinstance(out, tuple):
+            logits, aux = out
+        else:
+            logits, aux = out, jnp.float32(0.0)
+        nll = next_token_loss(logits, batch["tokens"], z_loss=tc.z_loss)
+        return nll + tc.aux_weight * aux, (nll, aux)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if tc.microbatches <= 1:
+            (loss, (nll, aux)), grads = grad_fn(params, batch)
+            return loss, nll, aux, grads
+
+        def split(x):
+            b = x.shape[0]
+            assert b % tc.microbatches == 0, (b, tc.microbatches)
+            return x.reshape(tc.microbatches, b // tc.microbatches, *x.shape[1:])
+
+        mb = jax.tree.map(split, batch)
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def acc(carry, mbatch):
+            loss_a, nll_a, aux_a, g_a = carry
+            (loss, (nll, aux)), g = grad_fn(params, mbatch)
+            g_a = jax.tree.map(lambda a, b_: a + b_.astype(jnp.float32), g_a, g)
+            return (loss_a + loss, nll_a + nll, aux_a + aux, g_a), None
+
+        (loss, nll, aux, grads), _ = jax.lax.scan(
+            acc, (jnp.float32(0), jnp.float32(0), jnp.float32(0), zero_g), mb
+        )
+        inv = 1.0 / tc.microbatches
+        grads = jax.tree.map(lambda g: (g * inv).astype(jnp.float32), grads)
+        return loss * inv, nll * inv, aux * inv, grads
+
+    def train_step(state: TrainState, batch: dict):
+        loss, nll, aux, grads = compute_grads(state.params, batch)
+        lr = lr_schedule(state.step) if lr_schedule is not None else None
+        new_params, new_opt, om = adamw_update(state.params, grads, state.opt, tc.optimizer, lr=lr)
+        # ONE packed metrics vector (h2 move): single reduction point
+        tokens = jnp.float32(batch["tokens"].size)
+        metrics_vec = jnp.stack([loss, nll, aux, om["grad_norm"], tokens])
+        metrics = {
+            "loss": metrics_vec[0],
+            "nll": metrics_vec[1],
+            "aux": metrics_vec[2],
+            "grad_norm": metrics_vec[3],
+            "tokens": metrics_vec[4],
+            "lr": om["lr"],
+        }
+        return TrainState(params=new_params, opt=new_opt, step=state.step + 1), metrics
+
+    return train_step

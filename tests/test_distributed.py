@@ -1,0 +1,157 @@
+"""Distributed PIPECG: h1/h2/h3 schedules on multi-device (virtual) meshes.
+
+Multi-device cases run in subprocesses with XLA_FLAGS set before jax import
+(the main test process keeps the real single-device view).
+"""
+import numpy as np
+import pytest
+
+from conftest import run_multidevice
+
+# Single-process (P=1) sanity: the distributed path degenerates correctly.
+import jax
+import jax.numpy as jnp
+
+from repro.core import jacobi, pipecg
+from repro.core.distributed import make_solver_mesh, pipecg_distributed
+from repro.core.perfmodel import StragglerTracker, decompose, relative_weights
+from repro.sparse import (
+    balanced_rows,
+    poisson27,
+    shard_dia,
+    shard_vector,
+    spmv,
+    synthetic_spd_dia,
+    unshard_vector,
+)
+
+
+class TestSingleShard:
+    @pytest.mark.parametrize("method", ["h1", "h2", "h3"])
+    def test_p1_matches_single_device(self, method):
+        A = poisson27(6)
+        xstar = jnp.ones((A.n,)) / jnp.sqrt(A.n)
+        b = spmv(A, xstar)
+        bounds = balanced_rows(A.n, 1)
+        As = shard_dia(A, bounds)
+        mesh = make_solver_mesh(1)
+        inv = shard_vector(jacobi(A).inv_diag, bounds)
+        res = pipecg_distributed(
+            As, shard_vector(b, bounds), inv, mesh=mesh, method=method, atol=1e-6, maxiter=500
+        )
+        x = unshard_vector(res.x, bounds)
+        ref = pipecg(A, b, M=jacobi(A), atol=1e-6, maxiter=500)
+        assert bool(res.converged)
+        assert abs(int(res.iterations) - int(ref.iterations)) <= 1
+        np.testing.assert_allclose(np.asarray(x), np.asarray(ref.x), rtol=1e-3, atol=1e-5)
+
+
+_MULTI_TEMPLATE = """
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import jacobi, pipecg
+from repro.core.distributed import make_solver_mesh, pipecg_distributed
+from repro.core.perfmodel import decompose
+from repro.sparse import (balanced_rows, synthetic_spd_dia, poisson27, shard_dia,
+                          shard_vector, spmv, unshard_vector)
+assert jax.device_count() == {P}, jax.device_count()
+
+A = {matrix}
+xstar = jnp.ones((A.n,)) / jnp.sqrt(A.n)
+b = spmv(A, xstar)
+M = jacobi(A)
+bounds = {bounds}
+As = shard_dia(A, bounds)
+mesh = make_solver_mesh({P})
+res = pipecg_distributed(As, shard_vector(b, bounds), shard_vector(M.inv_diag, bounds),
+                         mesh=mesh, method={method!r}, atol=1e-6, maxiter=1000)
+x = unshard_vector(res.x, bounds)
+ref = pipecg(A, b, M=M, atol=1e-6, maxiter=1000)
+assert bool(res.converged), "did not converge"
+assert abs(int(res.iterations) - int(ref.iterations)) <= 2, (int(res.iterations), int(ref.iterations))
+err = float(jnp.linalg.norm(x - ref.x))
+assert err < 1e-3, err
+true_res = float(jnp.linalg.norm(b - spmv(A, x)))
+assert true_res < 1e-3, true_res
+print("OK", int(res.iterations), err)
+"""
+
+
+class TestMultiShard:
+    @pytest.mark.parametrize("method", ["h1", "h2", "h3"])
+    def test_poisson_8way(self, method):
+        out = run_multidevice(
+            _MULTI_TEMPLATE.format(
+                P=8, matrix="poisson27(12)", bounds="balanced_rows(A.n, 8)", method=method
+            ),
+            n_devices=8,
+        )
+        assert "OK" in out
+
+    @pytest.mark.parametrize("method", ["h2", "h3"])
+    def test_synthetic_4way(self, method):
+        out = run_multidevice(
+            _MULTI_TEMPLATE.format(
+                P=4,
+                matrix="synthetic_spd_dia(1000, 9.0, seed=3, bandwidth=16)",
+                bounds="balanced_rows(A.n, 4)",
+                method=method,
+            ),
+            n_devices=4,
+        )
+        assert "OK" in out
+
+    def test_h3_weighted_partition(self):
+        """The paper's performance-model (unequal) decomposition, h3 only."""
+        code = _MULTI_TEMPLATE.format(
+            P=4,
+            matrix="synthetic_spd_dia(1200, 7.0, seed=5, bandwidth=12)",
+            bounds="decompose(A, 4, weights=np.array([2.0, 1.0, 1.0, 1.0]))",
+            method="h3",
+        )
+        out = run_multidevice(code, n_devices=4)
+        assert "OK" in out
+
+    def test_h1_rejects_unequal(self):
+        with pytest.raises(AssertionError, match="equal shards"):
+            run_multidevice(
+                _MULTI_TEMPLATE.format(
+                    P=4,
+                    matrix="synthetic_spd_dia(1200, 7.0, seed=5, bandwidth=12)",
+                    bounds="np.array([0, 200, 500, 900, 1200])",
+                    method="h1",
+                ),
+                n_devices=4,
+            )
+
+
+class TestPerfModel:
+    def test_relative_weights(self):
+        # paper: s = nnz/t; 2x slower device gets half the share
+        w = relative_weights(np.array([1.0, 2.0]))
+        np.testing.assert_allclose(w, [2 / 3, 1 / 3])
+
+    def test_decompose_tracks_weights(self):
+        A = synthetic_spd_dia(2000, 9.0, seed=7)
+        b = decompose(A, 4, weights=np.array([3.0, 1.0, 1.0, 1.0]))
+        data = np.asarray(A.data)
+        row_nnz = (data != 0).sum(axis=0)
+        shares = [row_nnz[b[i] : b[i + 1]].sum() for i in range(4)]
+        total = sum(shares)
+        assert shares[0] / total == pytest.approx(0.5, abs=0.05)
+
+    def test_straggler_tracker(self):
+        tr = StragglerTracker(n_devices=4)
+        tr.update(np.array([1.0, 1.0, 1.0, 1.0]))
+        assert not tr.needs_rebalance()
+        for _ in range(20):
+            tr.update(np.array([1.0, 1.0, 1.0, 2.0]))  # device 3 degrades
+        assert tr.needs_rebalance()
+        w = tr.proposed_weights()
+        assert w[3] == pytest.approx(w[0] / 2, rel=0.1)
+
+    def test_measure_spmv_time_runs(self):
+        from repro.core.perfmodel import measure_spmv_time
+
+        A = poisson27(5)
+        t = measure_spmv_time(A, runs=3)
+        assert t > 0

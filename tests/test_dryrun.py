@@ -1,0 +1,56 @@
+"""Dry-run smoke: one cheap cell end-to-end in a 512-device subprocess.
+
+The full 40-cell x 2-mesh sweep runs via ``python -m repro.launch.dryrun``
+(results in experiments/dryrun); here we verify the machinery itself —
+lower + compile + roofline extraction on the smallest architecture.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.mark.filterwarnings("ignore")
+def test_dryrun_whisper_single_pod(tmp_path):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)  # dryrun.py sets its own, before importing jax
+    env["PYTHONPATH"] = SRC
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "whisper-tiny", "--shape", "train_4k",
+         "--mesh", "single", "--out", str(tmp_path)],
+        capture_output=True, text=True, timeout=900, env=env,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    rec = json.load(open(tmp_path / "whisper-tiny_train_4k_single.json"))
+    assert rec["status"] == "ok"
+    assert rec["program"] == "train_step"
+    assert rec["mesh"] == "16x16"
+    for k in ("compute_s", "memory_s", "collective_s", "dominant"):
+        assert k in rec["roofline_hlo"]
+    assert rec["hlo"]["flops_per_chip"] > 0
+    assert rec["memory"]["peak_bytes_per_device"] >= 0
+    # whisper's vocab (51865) cannot shard 16 ways -> must be logged
+    assert any(f["axis"] == "vocab" for f in rec["sharding_fallbacks"])
+
+
+def test_long500k_skip_reason():
+    """Full-attention archs must skip long_500k with an explanatory record,
+    without touching any jax device state (logic-only path)."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = SRC
+    code = (
+        "from repro.launch.dryrun import run_cell;"
+        "r = run_cell('qwen3-8b', 'long_500k', False, verbose=False);"
+        "assert r['status'] == 'skipped', r;"
+        "assert 'quadratic' in r['reason'];"
+        "print('OK')"
+    )
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True, text=True, timeout=300, env=env)
+    assert proc.returncode == 0, proc.stderr[-1500:]
+    assert "OK" in proc.stdout

@@ -1,0 +1,153 @@
+"""Sparse substrate tests: formats, conversions, stencils, partitioning."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.sparse import (
+    TABLE1,
+    balanced_nnz,
+    balanced_rows,
+    bell_from_csr,
+    csr_from_dia,
+    dia_from_csr,
+    partition_stats,
+    poisson7,
+    poisson27,
+    poisson125,
+    shard_dia,
+    shard_vector,
+    spmv,
+    spmv_bell,
+    spmv_dia,
+    synthetic_spd_dia,
+    table1_matrix,
+    unshard_vector,
+)
+from repro.sparse.formats import csr_from_dense
+
+
+def _dense(dia):
+    return np.asarray(csr_from_dia(dia).to_dense())
+
+
+class TestFormats:
+    def test_dia_roundtrip_csr(self):
+        A = synthetic_spd_dia(64, 7.0, seed=3)
+        csr = csr_from_dia(A)
+        A2 = dia_from_csr(csr)
+        np.testing.assert_allclose(_dense(A), _dense(A2))
+
+    def test_bell_matches_dia(self):
+        A = synthetic_spd_dia(96, 9.0, seed=4)
+        B = bell_from_csr(csr_from_dia(A))
+        x = jax.random.normal(jax.random.PRNGKey(0), (96,))
+        np.testing.assert_allclose(np.asarray(spmv_bell(B, x)), np.asarray(spmv_dia(A, x)), rtol=1e-5, atol=1e-5)
+
+    def test_diagonal_extraction(self):
+        A = synthetic_spd_dia(50, 5.0, seed=5)
+        B = bell_from_csr(csr_from_dia(A))
+        d = np.diag(_dense(A))
+        np.testing.assert_allclose(np.asarray(A.diagonal()), d)
+        np.testing.assert_allclose(np.asarray(B.diagonal()), d)
+
+    def test_csr_from_dense(self):
+        A = np.array([[2.0, 1.0, 0.0], [1.0, 3.0, 0.5], [0.0, 0.5, 1.0]])
+        csr = csr_from_dense(A)
+        np.testing.assert_allclose(csr.to_dense(), A)
+        assert csr.nnz == 7
+
+
+class TestStencil:
+    @pytest.mark.parametrize("gen,n,expect_diags", [(poisson7, 6, 7), (poisson27, 5, 27), (poisson125, 6, 125)])
+    def test_diag_counts(self, gen, n, expect_diags):
+        A = gen(n)
+        assert A.n == n**3
+        assert A.n_diags == expect_diags
+
+    @pytest.mark.parametrize("gen,n", [(poisson7, 5), (poisson27, 4), (poisson125, 5)])
+    def test_spd(self, gen, n):
+        A = gen(n)
+        Ad = _dense(A)
+        np.testing.assert_allclose(Ad, Ad.T, atol=0)
+        w = np.linalg.eigvalsh(Ad)
+        assert w.min() > 0, f"not PD: min eig {w.min()}"
+
+    def test_125pt_nnz_density(self):
+        # paper Table II: 125-pt Poisson matrices have nnz/N ~ 120-123
+        A = poisson125(12)
+        assert 100 < A.nnz() / A.n <= 125
+
+    def test_boundary_no_wraparound(self):
+        # row at the grid edge must not couple to the next grid line
+        A = poisson27(4)
+        Ad = _dense(A)
+        # point (x=3,y=0,z=0) = idx 3; its +x neighbor would wrap to idx 4 =(x=0,y=1)
+        assert Ad[3, 4] == 0.0
+
+
+class TestSynthetic:
+    @pytest.mark.parametrize("name", ["bcsstk15", "offshore"])
+    def test_table1_analogue(self, name):
+        A = table1_matrix(name, scale=0.05 if name == "offshore" else 0.2)
+        n_full, nnz_per_row = TABLE1[name]
+        got = A.nnz() / A.n
+        assert got == pytest.approx(nnz_per_row, rel=0.35)
+        Ad = _dense(A) if A.n <= 2000 else None
+        if Ad is not None:
+            w = np.linalg.eigvalsh(Ad)
+            assert w.min() > 0
+
+    def test_symmetry(self):
+        A = synthetic_spd_dia(200, 11.0, seed=6)
+        Ad = _dense(A)
+        np.testing.assert_allclose(Ad, Ad.T)
+        assert np.linalg.eigvalsh(Ad).min() > 0
+
+
+class TestPartition:
+    def test_balanced_rows(self):
+        b = balanced_rows(103, 4)
+        assert b[0] == 0 and b[-1] == 103
+        sizes = np.diff(b)
+        assert sizes.max() - sizes.min() <= 1
+
+    def test_balanced_nnz_uniform_weights(self):
+        row_nnz = np.ones(100) * 5
+        row_nnz[:50] = 15  # heavy top half
+        b = balanced_nnz(row_nnz, 2)
+        nnz0 = row_nnz[: b[1]].sum()
+        nnz1 = row_nnz[b[1] :].sum()
+        assert abs(nnz0 - nnz1) / (nnz0 + nnz1) < 0.1
+
+    def test_balanced_nnz_weighted(self):
+        """The paper's performance model: 3x faster device gets ~3x the nnz."""
+        row_nnz = np.ones(1000) * 10
+        b = balanced_nnz(row_nnz, 2, weights=np.array([3.0, 1.0]))
+        assert b[1] == pytest.approx(750, abs=5)
+
+    def test_shard_roundtrip(self):
+        A = synthetic_spd_dia(256, 7.0, seed=7, bandwidth=8)
+        bounds = balanced_rows(256, 4)
+        sh = shard_dia(A, bounds)
+        assert sh.data.shape[0] == 4
+        x = jnp.arange(256.0)
+        xs = shard_vector(x, bounds)
+        np.testing.assert_allclose(np.asarray(unshard_vector(xs, bounds)), np.asarray(x))
+
+    def test_shard_identity_padding(self):
+        A = synthetic_spd_dia(100, 5.0, seed=8, bandwidth=4)
+        bounds = np.array([0, 30, 60, 100])  # unequal; rows_max=40
+        sh = shard_dia(A, bounds)
+        j0 = sh.offsets.index(0)
+        # padded diag rows are exactly 1
+        assert np.asarray(sh.data)[0, j0, 30:].min() == 1.0
+
+    def test_partition_stats_2d(self):
+        """nnz1/nnz2 split — halo nnz must be the band crossings only."""
+        A = synthetic_spd_dia(128, 5.0, seed=9, bandwidth=4)
+        bounds = balanced_rows(128, 4)
+        st = partition_stats(A, bounds)
+        total_halo = sum(s["nnz_halo"] for s in st["shards"])
+        # halo nnz bounded by 2 * bandwidth * n_diags * n_cuts
+        assert 0 < total_halo <= 2 * 4 * A.n_diags * 3

@@ -1,0 +1,80 @@
+"""Perf-iteration driver (EXPERIMENTS.md §Perf).
+
+Runs a (arch, shape) cell under a sequence of named variants and prints the
+three roofline terms for each, so every hypothesis -> change -> before ->
+after cycle is one invocation:
+
+    PYTHONPATH=src python tools/hillclimb.py --arch internlm2-1.8b --shape train_4k \
+        --variants baseline,flash512,flash512+saveAR
+
+Variant vocabulary (combine with '+'):
+    baseline      paper-faithful step as used in the 40-cell sweep
+    flashN        chunked online-softmax attention, chunk=N (e.g. flash512)
+    saveAR        remat policy save_collectives (keep post-psum activations)
+    seqkv         decode cache layout seq_model (flash-decode sharding)
+    pipeclip      pipelined (one-step-stale) gradient clip
+    moeshard      explicit shard_map MoE dispatch (local experts + one psum)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.dryrun import run_cell  # noqa: E402  (sets XLA_FLAGS first)
+
+
+def parse_variant(spec: str) -> dict:
+    v: dict = {}
+    if spec == "baseline":
+        return v
+    for part in spec.split("+"):
+        if part.startswith("flash"):
+            v["attn_chunk"] = int(part[len("flash"):])
+        elif part == "saveAR":
+            v["remat"] = "save_collectives"
+        elif part == "seqkv":
+            v["cache_layout"] = "seq_model"
+        elif part == "pipeclip":
+            v["pipelined_clip"] = True
+        elif part == "moeshard":
+            v["moe_shard_map"] = True
+        else:
+            raise SystemExit(f"unknown variant token {part!r}")
+    return v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variants", default="baseline")
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    rows = []
+    for spec in args.variants.split(","):
+        v = parse_variant(spec)
+        rec = run_cell(args.arch, args.shape, False, verbose=False, variant=v)
+        tag = f"{args.arch}_{args.shape}_{spec}"
+        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1, default=float)
+        t = rec["roofline_hlo"]
+        rows.append((spec, t))
+        print(
+            f"{spec:28s} compute={t['compute_s']:8.3f}s memory={t['memory_s']:8.3f}s "
+            f"collective={t['collective_s']:8.3f}s dom={t['dominant']:10s} "
+            f"bound={t['bound_s']:8.3f}s peak/dev={rec['memory']['peak_bytes_per_device']/2**30:.2f}GiB",
+            flush=True,
+        )
+    base = rows[0][1]["bound_s"]
+    for spec, t in rows[1:]:
+        print(f"{spec}: bound {base:.3f}s -> {t['bound_s']:.3f}s  ({base / t['bound_s']:.2f}x)")
+
+
+if __name__ == "__main__":
+    main()
