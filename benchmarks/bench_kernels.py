@@ -11,9 +11,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.pipecg import _vma_dots_jnp
 from repro.launch.roofline import analyze_hlo
-from repro.kernels import fused_vma_dots
+from repro.kernels import fused_vma_dots, fused_vma_dots_ref
 
 from .common import emit, timeit_call
 
@@ -49,7 +48,9 @@ def main(n: int = 1 << 20):
     inv = jnp.abs(jax.random.normal(key, (n,))) + 0.5
     a, b = jnp.float32(0.3), jnp.float32(0.7)
 
-    f_fused_jnp = jax.jit(_vma_dots_jnp)
+    # the canonical iteration core (core.iteration.pipecg_vma_core) via the
+    # kernel oracle, compiled as ONE fused jit
+    f_fused_jnp = jax.jit(fused_vma_dots_ref)
 
     us_u = timeit_call(unfused_calls, *vecs, inv, a, b)
     us_f = timeit_call(f_fused_jnp, *vecs, inv, a, b)

@@ -1,9 +1,10 @@
 """Paper Fig. 6 / Fig. 7 analogue: solver-method comparison per matrix.
 
 Matrices: synthetic analogues of the paper's SuiteSparse Table I (matched
-N and nnz/N; big ones scaled to CPU size) + a 27-pt Poisson. Methods:
-PCG (the paper's Paralution/PETSc baseline algorithm), Chronopoulos-Gear,
-PIPECG (Alg. 2), and PIPECG with the fused Pallas iteration core.
+N and nnz/N; big ones scaled to CPU size) + a 27-pt Poisson. Methods are
+rows of the ``repro.solve`` registry: PCG (the paper's Paralution/PETSc
+baseline algorithm), Chronopoulos-Gear, PIPECG (Alg. 2), and PIPECG with
+the fused Pallas iteration core.
 
 Reported: time per solver ITERATION (us) — the paper's speedups are
 iteration-cost driven since all variants converge in the same #iterations
@@ -14,7 +15,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import chronopoulos_cg, jacobi, pcg, pipecg
+from repro import solve
 from repro.sparse import poisson27, spmv, table1_matrix
 
 from .common import emit, timeit_call
@@ -27,11 +28,12 @@ MATRICES = [
     ("poisson27-20", lambda: poisson27(20)),                          # N=8000
 ]
 
+# (method, engine) rows of the repro.solve registry
 METHODS = {
-    "pcg": lambda A, b, M, it: pcg(A, b, M=M, atol=0.0, maxiter=it),
-    "chrono": lambda A, b, M, it: chronopoulos_cg(A, b, M=M, atol=0.0, maxiter=it),
-    "pipecg": lambda A, b, M, it: pipecg(A, b, M=M, atol=0.0, maxiter=it),
-    "pipecg-fused": lambda A, b, M, it: pipecg(A, b, M=M, atol=0.0, maxiter=it, engine="pallas"),
+    "pcg": ("pcg", "jnp"),
+    "chrono": ("chronopoulos", "jnp"),
+    "pipecg": ("pipecg", "jnp"),
+    "pipecg-fused": ("pipecg", "pallas"),
 }
 
 
@@ -40,13 +42,20 @@ def main(iters_per_solve: int = 40):
         A = gen()
         xstar = jnp.ones((A.n,)) / jnp.sqrt(A.n)
         b = spmv(A, xstar)
-        M = jacobi(A)
         # convergence equivalence (the paper's correctness premise)
-        its = {k: int(f(A, b, M, 10000 if False else 2000).iterations)
-               for k, f in (("pcg", lambda A, b, M, it: pcg(A, b, M=M, atol=1e-5, maxiter=it)),
-                            ("pipecg", lambda A, b, M, it: pipecg(A, b, M=M, atol=1e-5, maxiter=it)))}
-        for meth, fn in METHODS.items():
-            us = timeit_call(lambda: fn(A, b, M, iters_per_solve), warmup=1, iters=3)
+        its = {
+            k: int(solve(A, b, method=k, M="jacobi", atol=1e-5, maxiter=2000).iterations)
+            for k in ("pcg", "pipecg")
+        }
+        for meth, (method, engine) in METHODS.items():
+            us = timeit_call(
+                lambda: solve(
+                    A, b, method=method, engine=engine, M="jacobi",
+                    atol=0.0, maxiter=iters_per_solve,
+                ),
+                warmup=1,
+                iters=3,
+            )
             emit(
                 f"solver/{mname}/{meth}",
                 us / iters_per_solve,

@@ -1,10 +1,13 @@
 """Quickstart: solve a 27-pt Poisson system with every CG variant.
 
+Everything goes through the one registry entry point ``repro.solve`` —
+methods and kernel engines are configuration, not different APIs.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax.numpy as jnp
 
-from repro.core import chronopoulos_cg, jacobi, pcg, pipecg
+from repro import solve
 from repro.sparse import poisson27, spmv
 
 
@@ -12,17 +15,16 @@ def main():
     A = poisson27(16)  # 4096 unknowns, SPD, nnz/N ~ 26
     xstar = jnp.ones((A.n,)) / jnp.sqrt(A.n)  # paper's exact solution 1/sqrt(N)
     b = spmv(A, xstar)
-    M = jacobi(A)  # the paper's preconditioner
 
     print(f"A: N={A.n}  nnz/N={A.nnz()/A.n:.1f}  bandwidth={A.bandwidth}")
-    for name, solver, kw in [
-        ("PCG (Alg 1)           ", pcg, {}),
-        ("Chronopoulos-Gear     ", chronopoulos_cg, {}),
-        ("PIPECG (Alg 2)        ", pipecg, {}),
-        ("PIPECG + fused kernel ", pipecg, {"engine": "pallas"}),
-        ("PIPECG + residual-repl", pipecg, {"replace_every": 25}),
+    for name, method, kw in [
+        ("PCG (Alg 1)           ", "pcg", {}),
+        ("Chronopoulos-Gear     ", "chronopoulos", {}),
+        ("PIPECG (Alg 2)        ", "pipecg", {"engine": "jnp"}),
+        ("PIPECG + fused kernels", "pipecg", {"engine": "pallas"}),
+        ("PIPECG + residual-repl", "pipecg", {"replace_every": 25}),
     ]:
-        res = solver(A, b, M=M, atol=1e-6, maxiter=500, **kw)
+        res = solve(A, b, method=method, M="jacobi", atol=1e-6, maxiter=500, **kw)
         err = float(jnp.linalg.norm(res.x - xstar))
         print(
             f"{name}: iters={int(res.iterations):3d}  "

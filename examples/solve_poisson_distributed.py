@@ -2,7 +2,10 @@
 
 Runs on 8 virtual devices (the XLA flag below must precede the jax import),
 uses the performance model to decompose rows by nnz with a simulated slow
-device, and solves with the 2-D (local/halo overlap) schedule.
+device, and solves with the 2-D (local/halo overlap) schedule — all
+through the ``repro.solve`` registry: ``method="h3"`` is configuration
+(packed psum + halo SPMV) of the same shared iteration core the
+single-device reference runs.
 
     PYTHONPATH=src python examples/solve_poisson_distributed.py
 """
@@ -10,14 +13,12 @@ import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import jacobi, pipecg
-from repro.core.distributed import make_solver_mesh, pipecg_distributed
+from repro import solve
 from repro.core.perfmodel import decompose, relative_weights
-from repro.sparse import partition_stats, poisson125, shard_dia, shard_vector, spmv, unshard_vector
+from repro.sparse import partition_stats, poisson125, spmv
 
 
 def main():
@@ -27,7 +28,6 @@ def main():
     A = poisson125(32)
     xstar = jnp.ones((A.n,)) / jnp.sqrt(A.n)
     b = spmv(A, xstar)
-    M = jacobi(A)
 
     # --- the paper's performance model: one device measured 1.5x slower ---
     step_times = np.array([1.0, 1.0, 1.0, 1.5, 1.0, 1.0, 1.0, 1.0])
@@ -38,23 +38,16 @@ def main():
     for i, s in enumerate(stats["shards"]):
         print(f"  shard {i}: rows={s['rows']:4d} nnz_local={s['nnz_local']:6d} nnz_halo={s['nnz_halo']:5d}")
 
-    As = shard_dia(A, bounds)
-    mesh = make_solver_mesh(P)
-    res = pipecg_distributed(
-        As,
-        shard_vector(b, bounds),
-        shard_vector(M.inv_diag, bounds),
-        mesh=mesh,
-        method="h3",
+    res = solve(
+        A, b, method="h3", M="jacobi", shards=P, weights=weights,
         atol=1e-5,  # the paper's tolerance; f32 attainable at this N
         maxiter=1000,
     )
-    x = unshard_vector(res.x, bounds)
-    ref = pipecg(A, b, M=M, atol=1e-5, maxiter=1000)
+    ref = solve(A, b, method="pipecg", M="jacobi", atol=1e-5, maxiter=1000)
     print(
         f"h3 distributed: iters={int(res.iterations)} (single-device {int(ref.iterations)})  "
-        f"|x - x_ref|={float(jnp.linalg.norm(x - ref.x)):.2e}  "
-        f"true residual={float(jnp.linalg.norm(b - spmv(A, x))):.2e}"
+        f"|x - x_ref|={float(jnp.linalg.norm(res.x - ref.x)):.2e}  "
+        f"true residual={float(jnp.linalg.norm(b - spmv(A, res.x))):.2e}"
     )
 
 

@@ -4,6 +4,24 @@ Reproduction + beyond-paper optimization of Tiwari & Vadhiyar,
 "Efficient executions of Pipelined Conjugate Gradient Method on
 Heterogeneous Architectures" (2021), re-targeted from CPU+GPU nodes to
 TPU pod meshes. See DESIGN.md for the mapping.
+
+Entry point: ``repro.solve(A, b, method=..., engine=...)`` — one registry
+over every solver method and kernel backend (see ``repro.api``).
 """
 
-__version__ = "0.1.0"
+__version__ = "0.2.0"
+
+_API = ("solve", "register_solver", "solver_names")
+
+
+def __getattr__(name):
+    # Lazy so `import repro` stays free of jax import cost/side effects.
+    if name in _API:
+        from . import api
+
+        return getattr(api, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_API))

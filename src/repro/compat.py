@@ -1,0 +1,71 @@
+"""JAX version compatibility shims.
+
+The repo targets recent JAX (``jax.shard_map``, ``jax.sharding.AxisType``,
+``jax.make_mesh(..., axis_types=...)``) but must run on older releases
+where those live under ``jax.experimental`` or do not exist. Import the
+symbols from here instead of from ``jax`` directly:
+
+    from repro.compat import AxisType, make_mesh, shard_map
+
+On older JAX, ``AxisType`` degrades to a no-op enum and ``make_mesh``
+silently drops ``axis_types`` (meshes are then fully ``Auto``, which is
+what every call site in this repo requests anyway).
+"""
+from __future__ import annotations
+
+import enum
+
+import jax
+
+__all__ = ["AxisType", "enable_x64", "make_mesh", "shard_map"]
+
+
+# --- enable_x64 context manager: jax.enable_x64 on new, experimental on old
+if hasattr(jax, "enable_x64"):
+    enable_x64 = jax.enable_x64
+else:  # pragma: no cover - exercised only on older JAX
+    from jax.experimental import enable_x64  # type: ignore[no-redef]
+
+
+# --- shard_map: top-level since jax 0.4.35+/0.5, experimental before -------
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # pragma: no cover - exercised only on older JAX
+    from jax.experimental.shard_map import shard_map as _shard_map_exp
+
+    def shard_map(f=None, **kwargs):
+        # The experimental version has no replication rule for `while`
+        # (which every solver loop here uses), so disable the check — the
+        # replicated outputs (psum-produced convergence scalars) really are
+        # identical across shards.
+        kwargs.setdefault("check_rep", False)
+        if f is None:
+            return lambda g: _shard_map_exp(g, **kwargs)
+        return _shard_map_exp(f, **kwargs)
+
+
+# --- AxisType: jax.sharding.AxisType on new JAX, no-op enum on old ---------
+try:
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+except ImportError:  # pragma: no cover - exercised only on older JAX
+
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        """Placeholder for jax.sharding.AxisType on JAX versions without it.
+
+        Old JAX has only Auto-style meshes, so every member is equivalent
+        to Auto and only exists so call sites type-check.
+        """
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+    """``jax.make_mesh`` that tolerates missing ``axis_types`` support."""
+    try:
+        return jax.make_mesh(
+            axis_shapes, axis_names, devices=devices, axis_types=axis_types
+        )
+    except TypeError:
+        return jax.make_mesh(axis_shapes, axis_names, devices=devices)

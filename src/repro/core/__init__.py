@@ -1,16 +1,39 @@
-"""Core solver library — the paper's contribution as composable JAX modules.
+"""Core solver library — one iteration core, many execution strategies.
 
-Single-device solvers:
+The paper's contribution is that *one* PIPECG recurrence admits many
+execution strategies; the package is layered accordingly:
+
+``iteration``   The single canonical PIPECG iteration core
+                (``pipecg_vma_core``: 8 VMAs + PC + dot partials — the only
+                implementation of the recurrence in the repo) and the
+                shared solver loop ``run_pipecg``, generic over the three
+                strategy axes below.
+``reduce``      Reduction strategies for the dot partials: ``local`` /
+                ``separate`` psums (h1) / ``packed`` psum (h2/h3).
+                Extension point: ``register_reducer``.
+``sparse.spmv`` SPMV engine dispatch (dense / DIA / BELL x jnp / Pallas).
+                Extension point: ``register_spmv``.
+``distributed`` shard_map wrapper: distributed SPMV strategies
+                (all-gather, halo-ppermute) + method registry h1/h2/h3.
+                Extension point: ``register_method``.
+``iteration``   also hosts the iteration-core engine registry
+                ("jnp" / "pallas" fused kernel). Extension point:
+                ``register_core``.
+
+Front-ends (thin configuration over the shared loop):
+
   pcg             — Algorithm 1 (baseline; 3 blocking reductions/iter)
   chronopoulos_cg — single merged reduction/iter, not overlapped
-  pipecg          — Algorithm 2 (reduction overlapped with PC+SPMV);
-                    engine="pallas" uses the fused iteration-core kernel
+  pipecg          — Algorithm 2 single-device (engine="pallas" fuses the
+                    iteration core; spmv_engine routes the SPMV kernels)
+  distributed.pipecg_distributed — h1/h2/h3 on a device mesh
 
-Distributed (shard_map): repro.core.distributed.pipecg_distributed with
-methods "h1"/"h2"/"h3" mirroring the paper's Hybrid-PIPECG-1/2/3.
+The top-level ``repro.solve(A, b, method=..., engine=...)`` registry
+(``repro.api``) unifies all of them.
 """
 from .chronopoulos import chronopoulos_cg
-from .pcg import dot_f32, pcg
+from .iteration import dot_f32, get_core, pipecg_vma_core, register_core, run_pipecg
+from .pcg import pcg
 from .pipecg import pipecg
 from .preconditioners import (
     BlockJacobiPC,
@@ -21,6 +44,7 @@ from .preconditioners import (
     identity,
     jacobi,
 )
+from .reduce import make_reducer, register_reducer
 from .types import SolveResult
 
 __all__ = [
@@ -32,8 +56,14 @@ __all__ = [
     "block_jacobi",
     "chronopoulos_cg",
     "dot_f32",
+    "get_core",
     "identity",
     "jacobi",
+    "make_reducer",
     "pcg",
     "pipecg",
+    "pipecg_vma_core",
+    "register_core",
+    "register_reducer",
+    "run_pipecg",
 ]

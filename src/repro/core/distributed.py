@@ -2,34 +2,33 @@
 
 The paper's CPU+GPU task/data split is re-targeted to inter-chip
 parallelism (DESIGN.md §2). Rows of the banded operator are partitioned
-across the ``rows`` mesh axis; each method changes *what* is communicated
-per iteration and *what hides it*:
+across the ``rows`` mesh axis; each method is pure *configuration* of the
+shared iteration loop (``core.iteration.run_pipecg``) — a distributed SPMV
+strategy plus a reduction strategy (``core.reduce``):
 
-method "h1" (Hybrid-PIPECG-1 analogue)
-    Three separate ``psum`` reductions (gamma, delta, ||u||^2) issued right
-    after the vector updates, plus a full ``all_gather`` of the m vector for
-    the SPMV. Maximum collective count; every collective is dataflow-
-    independent of PC+SPMV, so an async scheduler may overlap them.
+    method   reduction          SPMV            (paper analogue)
+    ------   ----------------   -------------   -----------------------------
+    "h1"     3 separate psums   all_gather      Hybrid-PIPECG-1: max overlap
+    "h2"     1 packed psum      all_gather      Hybrid-PIPECG-2: copy shrink
+    "h3"     1 packed psum      halo ppermute   Hybrid-PIPECG-3: 2-D decomp
 
-method "h2" (Hybrid-PIPECG-2 analogue)
-    The three dot partials are packed into ONE length-3 ``psum`` — the
-    paper's copy-shrinking trick (3N -> N) applied to reduction latency
-    (3 collectives -> 1). SPMV still consumes a full ``all_gather``.
+SPMV strategies:
 
-method "h3" (Hybrid-PIPECG-3 analogue)
-    Packed psum + 2-D decomposition: the SPMV splits into a local band part
-    (needs only resident x — the paper's nnz1) and boundary corrections
-    (the paper's nnz2) fed by a ring ``ppermute`` of bandwidth-sized halo
-    slabs. The halo exchange is dataflow-independent of SPMV part 1, which
-    is exactly the overlap the paper engineers with CUDA streams. Supports
-    performance-model (nnz/throughput-weighted) partitions with unequal
-    shard sizes.
+``allgather`` — full-vector SPMV (N elements over the interconnect per
+    SPMV, like the paper's full-vector PCIe copies); equal shards only.
+``halo`` — local band part (paper's nnz1, needs only resident x) plus
+    boundary corrections (nnz2) fed by a ring ``ppermute`` of
+    bandwidth-sized slabs. The halo exchange is dataflow-independent of
+    SPMV part 1 — exactly the overlap the paper engineers with CUDA
+    streams. Supports performance-model (unequal) partitions.
 
-All three run inside one ``shard_map``-ped ``lax.while_loop``; convergence
-scalars are replicated via the psums.
+All methods run the one canonical iteration core inside one
+``shard_map``-ped ``lax.while_loop``; convergence scalars are replicated
+via the psums. New methods = new (reducer, spmv) registry entries.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from functools import partial
 from typing import Tuple
 
@@ -38,11 +37,22 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..compat import shard_map
 from ..sparse.partition import ShardedDIA
-from .pcg import dot_f32
+from .iteration import get_core, run_pipecg
+from .reduce import make_reducer
 from .types import SolveResult
 
-__all__ = ["pipecg_distributed", "make_solver_mesh", "spmv_halo", "spmv_allgather"]
+__all__ = [
+    "pipecg_distributed",
+    "make_solver_mesh",
+    "spmv_halo",
+    "spmv_allgather",
+    "DistMethod",
+    "register_dist_spmv",
+    "register_method",
+    "method_names",
+]
 
 
 def make_solver_mesh(n_shards: int, axis: str = "rows") -> Mesh:
@@ -52,15 +62,16 @@ def make_solver_mesh(n_shards: int, axis: str = "rows") -> Mesh:
 
 
 # ---------------------------------------------------------------------------
-# distributed SPMV variants (called inside shard_map)
+# distributed SPMV strategies (called inside shard_map)
 # ---------------------------------------------------------------------------
 
-def spmv_allgather(data, x, rows, offsets: Tuple[int, ...], hw: int, axis: str):
+def spmv_allgather(data, x, rows, offsets: Tuple[int, ...], hw: int, axis: str, n_shards: int = 0):
     """Full-vector SPMV: all_gather m, then band-multiply my row block.
 
     Requires equal shard sizes (rows == R on every shard). This is the
     h1/h2 communication pattern: N elements over the interconnect per
-    SPMV, like the paper's full-vector PCIe copies.
+    SPMV, like the paper's full-vector PCIe copies. ``n_shards`` is part
+    of the uniform strategy signature but unused (all_gather discovers it).
     """
     R = x.shape[0]
     xfull = jax.lax.all_gather(x, axis)  # (P, R)
@@ -115,26 +126,60 @@ def spmv_halo(data, x, rows, offsets: Tuple[int, ...], hw: int, axis: str, n_sha
     return y
 
 
+# Uniform strategy signature:
+#   fn(data, x, rows, *, offsets, hw, axis, n_shards) -> y_local
+_DIST_SPMV = {"allgather": spmv_allgather, "halo": spmv_halo}
+
+
+def register_dist_spmv(name: str, fn) -> None:
+    """Register a distributed SPMV strategy (uniform signature above)."""
+    _DIST_SPMV[name] = fn
+
+
 # ---------------------------------------------------------------------------
-# the distributed solver
+# methods = (reduction strategy, SPMV strategy) configuration
 # ---------------------------------------------------------------------------
 
-def _local_vma_core(z, q, s, p, x, r, u, w, n, m, inv_diag, alpha, beta):
-    """PIPECG lines 10-21 on the local block (same math as single-device)."""
-    z = n + beta * z
-    q = m + beta * q
-    s = w + beta * s
-    p = u + beta * p
-    x = x + alpha * p
-    r = r - alpha * s
-    u = u - alpha * q
-    w = w - alpha * z
-    m = inv_diag * w
-    g_part = dot_f32(r, u)
-    d_part = dot_f32(w, u)
-    n_part = dot_f32(u, u)
-    return z, q, s, p, x, r, u, w, m, g_part, d_part, n_part
+@dataclass(frozen=True)
+class DistMethod:
+    """A distributed execution strategy for the shared PIPECG core."""
 
+    reduce: str  # core.reduce strategy name
+    spmv: str  # key into _DIST_SPMV
+    equal_shards_only: bool  # allgather indexes by p*R: all shards same size
+
+
+_METHODS = {
+    "h1": DistMethod(reduce="separate", spmv="allgather", equal_shards_only=True),
+    "h2": DistMethod(reduce="packed", spmv="allgather", equal_shards_only=True),
+    "h3": DistMethod(reduce="packed", spmv="halo", equal_shards_only=False),
+}
+
+
+def register_method(name: str, method: DistMethod) -> None:
+    """Register a new (reducer, spmv) combination as a named method."""
+    from .reduce import reducer_names
+
+    if method.spmv not in _DIST_SPMV:
+        raise ValueError(
+            f"unknown SPMV strategy {method.spmv!r}; register it first via "
+            f"register_dist_spmv (have {tuple(sorted(_DIST_SPMV))})"
+        )
+    if method.reduce not in reducer_names():
+        raise ValueError(
+            f"unknown reduction strategy {method.reduce!r}; register it first "
+            f"via core.reduce.register_reducer (have {reducer_names()})"
+        )
+    _METHODS[name] = method
+
+
+def method_names() -> Tuple[str, ...]:
+    return tuple(sorted(_METHODS))
+
+
+# ---------------------------------------------------------------------------
+# the distributed solver: shard_map around the shared loop
+# ---------------------------------------------------------------------------
 
 def pipecg_distributed(
     As: ShardedDIA,
@@ -144,6 +189,7 @@ def pipecg_distributed(
     mesh: Mesh,
     axis: str = "rows",
     method: str = "h3",
+    engine: str = "jnp",
     atol: float = 1e-5,
     rtol: float = 0.0,
     maxiter: int = 10000,
@@ -154,40 +200,33 @@ def pipecg_distributed(
                   performance-model/unequal partitions; h1/h2 require equal).
     b_sh        — (P, R) sharded rhs from shard_vector.
     inv_diag_sh — (P, R) sharded Jacobi inverse diagonal (use ones for no PC).
+    engine      — iteration-core engine for the local block ("jnp"/"pallas"/
+                  "auto"), same registry as the single-device solver.
     Returns SolveResult with x of shape (P*R,) padded; use unshard_vector.
     """
-    if method not in ("h1", "h2", "h3"):
-        raise ValueError(f"method must be h1|h2|h3, got {method}")
+    if method not in _METHODS:
+        raise ValueError(f"method must be one of {method_names()}, got {method}")
+    cfg = _METHODS[method]
     Pn = As.n_shards
     R = As.rows_max
     hw = As.bandwidth
     offsets = As.offsets
     sizes = np.diff(np.asarray(As.boundaries))
-    if method in ("h1", "h2") and (sizes != R).any():
+    if cfg.equal_shards_only and (sizes != R).any():
         raise ValueError(f"{method} requires equal shards (use balanced_rows); sizes={sizes}")
 
-    if method == "h3":
-        local_spmv = partial(spmv_halo, offsets=offsets, hw=hw, axis=axis, n_shards=Pn)
-    else:
-        local_spmv = partial(spmv_allgather, offsets=offsets, hw=hw, axis=axis)
-
-    def psum_dots(g, d, nn):
-        if method == "h1":
-            # three separate reductions (paper: three separate async copies)
-            return (
-                jax.lax.psum(g, axis),
-                jax.lax.psum(d, axis),
-                jax.lax.psum(nn, axis),
-            )
-        packed = jax.lax.psum(jnp.stack([g, d, nn]), axis)
-        return packed[0], packed[1], packed[2]
+    if cfg.spmv not in _DIST_SPMV:
+        raise ValueError(f"method {method!r} names unknown SPMV strategy {cfg.spmv!r}")
+    local_spmv = partial(_DIST_SPMV[cfg.spmv], offsets=offsets, hw=hw, axis=axis, n_shards=Pn)
+    reducer = make_reducer(cfg.reduce, axis)
+    core = get_core(engine)
 
     spec_mat = P(axis, None, None)
     spec_vec = P(axis, None)
     spec_scalar = P(axis)
 
     @partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(spec_mat, spec_scalar, spec_vec, spec_vec),
         out_specs=(P(axis, None), P(), P(), P(), P()),
@@ -197,52 +236,20 @@ def pipecg_distributed(
         rows = rows_blk[0]
         b = b_blk[0]  # (R,)
         inv_diag = inv_blk[0]
-        dtype = b.dtype
 
-        def dist_spmv(v):
-            return local_spmv(data, v, rows)
-
-        # init (Alg 2 lines 1-3), x0 = 0
-        x0 = jnp.zeros_like(b)
-        r0 = b
-        u0 = inv_diag * r0
-        w0 = dist_spmv(u0)
-        g, d, nn = psum_dots(dot_f32(r0, u0), dot_f32(w0, u0), dot_f32(u0, u0))
-        norm0 = jnp.sqrt(nn)
-        m0 = inv_diag * w0
-        n0 = dist_spmv(m0)
-        thresh = jnp.maximum(jnp.float32(atol), jnp.float32(rtol) * norm0)
-        hist0 = jnp.full((maxiter + 1,), jnp.nan, jnp.float32).at[0].set(norm0.astype(jnp.float32))
-        zv = jnp.zeros_like(b)
-
-        def cond(state):
-            return (state[0] < maxiter) & (state[-2] > thresh)
-
-        def body(state):
-            (i, x, r, u, w, z, q, s, p, m, n,
-             gamma, gamma_prev, delta, alpha_prev, norm, hist) = state
-            beta = jnp.where(i > 0, gamma / gamma_prev, 0.0)
-            alpha = jnp.where(i > 0, gamma / (delta - beta * gamma / alpha_prev), gamma / delta)
-            z, q, s, p, x, r, u, w, m, g_p, d_p, n_p = _local_vma_core(
-                z, q, s, p, x, r, u, w, n, m, inv_diag, alpha.astype(dtype), beta.astype(dtype)
-            )
-            # the reduction(s): results consumed next iteration only
-            gamma_new, delta_new, uu = psum_dots(g_p, d_p, n_p)
-            # PC already fused into the VMA core; SPMV is reduction-independent
-            n = dist_spmv(m)
-            norm_new = jnp.sqrt(uu)
-            hist = hist.at[i + 1].set(norm_new.astype(jnp.float32))
-            return (i + 1, x, r, u, w, z, q, s, p, m, n,
-                    gamma_new, gamma, delta_new, alpha, norm_new, hist)
-
-        acc = g.dtype
-        state = (
-            jnp.int32(0), x0, r0, u0, w0, zv, zv, zv, zv, m0, n0,
-            g, jnp.ones((), acc), d, jnp.ones((), acc), norm0, hist0,
+        i, x, norm, converged, hist = run_pipecg(
+            b,
+            jnp.zeros_like(b),
+            spmv_fn=lambda v: local_spmv(data, v, rows),
+            pc_fn=lambda r: inv_diag * r,
+            core=core,
+            reducer=reducer,
+            inv_diag=inv_diag,  # PC fused into the canonical core
+            atol=jnp.float32(atol),
+            rtol=jnp.float32(rtol),
+            maxiter=maxiter,
         )
-        out = jax.lax.while_loop(cond, body, state)
-        i, x, norm, hist = out[0], out[1], out[-2], out[-1]
-        return x[None], i, norm, norm <= thresh, hist
+        return x[None], i, norm, converged, hist
 
     x, iters, norm, conv, hist = _solve(As.data, As.rows_valid, b_sh, inv_diag_sh)
     return SolveResult(

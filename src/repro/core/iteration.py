@@ -1,0 +1,215 @@
+r"""The canonical PIPECG iteration — one core, many execution strategies.
+
+Every PIPECG execution in this repo (single-device jnp, single-device
+fused-Pallas, distributed h1/h2/h3 under ``shard_map``) runs the SAME
+recurrence (Ghysels & Vanroose Alg. 2, lines 10-21):
+
+    scalars   beta_i, alpha_i           <- gamma/delta/alpha of it. i-1/i
+    VMAs      z,q,s,p (10-13)           <- beta
+    VMAs      x,r,u,w (14-17)           <- alpha
+    dots      gamma', delta', ||u||^2   (18-20)   \   independent of
+    PC        m = M^-1 w                (21)       >  each other ->
+    SPMV      n = A m                   (22)      /   overlappable
+
+The dots' results are consumed only at the *next* iteration's scalar
+computation — the slack the paper's hybrid methods exploit. What differs
+between executions is pure strategy, injected as three callables:
+
+* the **iteration core** (``get_core``): how the 8 VMAs + PC + dot
+  partials are evaluated — ``"jnp"`` (XLA fuses what it can) or
+  ``"pallas"`` (one explicit single-pass TPU kernel, paper §V-B).
+* the **SPMV strategy** (``spmv_fn``): dense / DIA / BELL on one device
+  (``sparse.spmv`` engine dispatch), or all-gather / halo-ppermute row
+  blocks inside ``shard_map`` (``core.distributed``).
+* the **reduction strategy** (``core.reduce``): identity on one device,
+  three separate psums (h1) or one packed psum (h2/h3) on a mesh.
+
+``run_pipecg`` is the single solver loop all of them share; there is
+exactly one implementation of the recurrence in the repository
+(``pipecg_vma_core``) and the Pallas kernel's oracle delegates to it.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .reduce import Reducer, make_reducer
+
+__all__ = [
+    "dot_f32",
+    "pipecg_vma_core",
+    "vma_core_pallas",
+    "get_core",
+    "core_names",
+    "register_core",
+    "run_pipecg",
+]
+
+
+def dot_f32(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Dot product accumulated in at-least-float32 (float64 stays float64)."""
+    acc = jnp.promote_types(a.dtype, jnp.float32)
+    return jnp.sum(a.astype(acc) * b.astype(acc))
+
+
+# ---------------------------------------------------------------------------
+# the iteration core (Alg. 2 lines 10-21 + dot partials)
+# ---------------------------------------------------------------------------
+
+def pipecg_vma_core(z, q, s, p, x, r, u, w, n, m, inv_diag, alpha, beta):
+    """THE PIPECG recurrence: 8 VMAs + (Jacobi) PC + 3 dot partials.
+
+    ``inv_diag`` is the fused Jacobi inverse diagonal, or None when the
+    preconditioner is applied by the caller (m is then returned as w).
+    Returns updated vectors plus the (local, unreduced) dot partials
+    ``(gamma, delta, ||u||^2)``.
+    """
+    z = n + beta * z
+    q = m + beta * q
+    s = w + beta * s
+    p = u + beta * p
+    x = x + alpha * p
+    r = r - alpha * s
+    u = u - alpha * q
+    w = w - alpha * z
+    m = inv_diag * w if inv_diag is not None else w
+    return z, q, s, p, x, r, u, w, m, (dot_f32(r, u), dot_f32(w, u), dot_f32(u, u))
+
+
+def vma_core_pallas(z, q, s, p, x, r, u, w, n, m, inv_diag, alpha, beta):
+    """Same contract as :func:`pipecg_vma_core` via the fused Pallas kernel."""
+    from ..kernels.fused_vma import fused_vma_dots
+
+    inv = inv_diag if inv_diag is not None else jnp.ones_like(w)
+    *vecs, dots = fused_vma_dots(z, q, s, p, x, r, u, w, n, m, inv, alpha, beta)
+    return (*vecs, (dots[0], dots[1], dots[2]))
+
+
+_CORES = {"jnp": pipecg_vma_core, "pallas": vma_core_pallas}
+
+
+def register_core(name: str, core: Callable) -> None:
+    """Register an alternative iteration-core engine (plug-in point)."""
+    _CORES[name] = core
+
+
+def core_names() -> Tuple[str, ...]:
+    return tuple(sorted(_CORES))
+
+
+def get_core(engine: str) -> Callable:
+    if engine == "auto":
+        engine = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if engine not in _CORES:
+        raise ValueError(f"unknown iteration engine {engine!r}; have {core_names()}")
+    return _CORES[engine]
+
+
+# ---------------------------------------------------------------------------
+# the shared solver loop
+# ---------------------------------------------------------------------------
+
+def run_pipecg(
+    b: jax.Array,
+    x0: jax.Array,
+    *,
+    spmv_fn: Callable[[jax.Array], jax.Array],
+    pc_fn: Callable[[jax.Array], jax.Array],
+    core: Callable = pipecg_vma_core,
+    reducer: Optional[Reducer] = None,
+    inv_diag: Optional[jax.Array] = None,
+    atol,
+    rtol,
+    maxiter: int,
+    replace_every: int = 0,
+):
+    """One PIPECG solve, generic over SPMV / PC / core / reduction strategy.
+
+    Must be called under ``jit`` (or inside ``shard_map``); ``maxiter`` and
+    ``replace_every`` are Python ints (static). When ``inv_diag`` is given
+    the core fuses the Jacobi PC; otherwise ``pc_fn`` is applied to w each
+    iteration. Returns ``(iterations, x, residual_norm, converged, history)``
+    as raw arrays so callers can rewrap (SolveResult / shard_map out_specs).
+    """
+    if reducer is None:
+        reducer = make_reducer("local")
+    dtype = b.dtype
+
+    # init (Alg. 2 lines 1-3)
+    r0 = b - spmv_fn(x0)
+    u0 = pc_fn(r0)
+    w0 = spmv_fn(u0)
+    gamma0, delta0, nn0 = reducer(dot_f32(r0, u0), dot_f32(w0, u0), dot_f32(u0, u0))
+    norm0 = jnp.sqrt(nn0)
+    m0 = pc_fn(w0)
+    n0 = spmv_fn(m0)
+    thresh = jnp.maximum(jnp.asarray(atol, norm0.dtype), jnp.asarray(rtol, norm0.dtype) * norm0)
+    hist0 = jnp.full((maxiter + 1,), jnp.nan, jnp.float32).at[0].set(norm0.astype(jnp.float32))
+    zv = jnp.zeros_like(b)
+
+    def cond(state):
+        i = state[0]
+        norm = state[-2]
+        return (i < maxiter) & (norm > thresh)
+
+    def body(state):
+        (i, x, r, u, w, z, q, s, p, m, n,
+         gamma, gamma_prev, delta, alpha_prev, norm, hist) = state
+        # scalars (lines 5-9) — consume *previous* iteration's reductions
+        beta = jnp.where(i > 0, gamma / gamma_prev, 0.0)
+        alpha = jnp.where(
+            i > 0, gamma / (delta - beta * gamma / alpha_prev), gamma / delta
+        )
+        # the one canonical core (lines 10-21)
+        z, q, s, p, x, r, u, w, m, (g_p, d_p, n_p) = core(
+            z, q, s, p, x, r, u, w, n, m, inv_diag, alpha.astype(dtype), beta.astype(dtype)
+        )
+        if inv_diag is None:
+            m = pc_fn(w)  # general (non-fused) preconditioner
+        # the reduction(s): results consumed next iteration only
+        gamma_new, delta_new, uu = reducer(g_p, d_p, n_p)
+        # SPMV (line 22) — independent of the reductions: overlap target
+        n = spmv_fn(m)
+        norm_new = jnp.sqrt(uu)
+
+        if replace_every > 0:
+            # Residual replacement (Cools & Vanroose): periodically re-derive
+            # every auxiliary vector from its definition to arrest the
+            # recurrence roundoff drift that plain PIPECG accumulates.
+            def _replace(args):
+                x, p, *_ = args
+                r = b - spmv_fn(x)
+                u = pc_fn(r)
+                w = spmv_fn(u)
+                s = spmv_fn(p)
+                q = pc_fn(s)
+                z = spmv_fn(q)
+                m = pc_fn(w)
+                n = spmv_fn(m)
+                gamma, delta, nn = reducer(dot_f32(r, u), dot_f32(w, u), dot_f32(u, u))
+                return x, p, r, u, w, s, q, z, m, n, gamma, delta, jnp.sqrt(nn)
+
+            do_rr = (i > 0) & (jnp.mod(i + 1, replace_every) == 0)
+            (x, p, r, u, w, s, q, z, m, n, gamma_new, delta_new, norm_new) = jax.lax.cond(
+                do_rr,
+                _replace,
+                lambda args: args,
+                (x, p, r, u, w, s, q, z, m, n, gamma_new, delta_new, norm_new),
+            )
+
+        hist = hist.at[i + 1].set(norm_new.astype(jnp.float32))
+        return (
+            i + 1, x, r, u, w, z, q, s, p, m, n,
+            gamma_new, gamma, delta_new, alpha, norm_new, hist,
+        )
+
+    acc = gamma0.dtype
+    state = (
+        jnp.int32(0), x0, r0, u0, w0, zv, zv, zv, zv, m0, n0,
+        gamma0, jnp.ones((), acc), delta0, jnp.ones((), acc), norm0, hist0,
+    )
+    out = jax.lax.while_loop(cond, body, state)
+    i, x, norm, hist = out[0], out[1], out[-2], out[-1]
+    return i, x, norm, norm <= thresh, hist

@@ -12,16 +12,11 @@ import jax
 import jax.numpy as jnp
 
 from ..sparse.spmv import spmv
+from .iteration import dot_f32
 from .preconditioners import apply_pc, identity
 from .types import SolveResult
 
 __all__ = ["pcg", "dot_f32"]
-
-
-def dot_f32(a: jax.Array, b: jax.Array) -> jax.Array:
-    """Dot product accumulated in at-least-float32 (float64 stays float64)."""
-    acc = jnp.promote_types(a.dtype, jnp.float32)
-    return jnp.sum(a.astype(acc) * b.astype(acc))
 
 
 @partial(jax.jit, static_argnames=("maxiter",))

@@ -1,19 +1,10 @@
 r"""Pipelined PCG — Algorithm 2 of the paper (Ghysels & Vanroose).
 
-Structure of one iteration (line numbers from the paper):
-
-    scalars   beta_i, alpha_i           <- gamma/delta/alpha of it. i-1/i
-    VMAs      z,q,s,p (10-13)           <- beta
-    VMAs      x,r,u,w (14-17)           <- alpha
-    dots      gamma', delta', ||u||     (18-20)   \   independent of
-    PC        m = M^-1 w                (21)       >  each other ->
-    SPMV      n = A m                   (22)      /   overlappable
-
-The dots' results are consumed only at the *next* iteration's scalar
-computation, which is the slack the paper's hybrid methods exploit. In this
-single-device form the eight VMAs + PC (+ the three dot partials, one step
-beyond the paper) can be fused into a single memory pass — set
-``engine="pallas"`` to use the fused TPU kernel.
+Thin single-device front-end over the shared solver loop in
+``core.iteration``: the iteration core (jnp or fused-Pallas), the SPMV
+engine and the (here: identity) reduction strategy are injected, so this
+file holds *no* iteration math of its own. The distributed solver
+(``core.distributed``) wraps the exact same loop in ``shard_map``.
 """
 from __future__ import annotations
 
@@ -23,126 +14,33 @@ import jax
 import jax.numpy as jnp
 
 from ..sparse.spmv import spmv
-from .pcg import dot_f32
+from .iteration import get_core, run_pipecg
 from .preconditioners import JacobiPC, apply_pc, identity
 from .types import SolveResult
 
 __all__ = ["pipecg"]
 
 
-def _vma_dots_jnp(z, q, s, p, x, r, u, w, n, m, inv_diag, alpha, beta):
-    """Reference (unfused) iteration core: 8 VMAs + PC + 3 dot partials."""
-    z = n + beta * z
-    q = m + beta * q
-    s = w + beta * s
-    p = u + beta * p
-    x = x + alpha * p
-    r = r - alpha * s
-    u = u - alpha * q
-    w = w - alpha * z
-    m = inv_diag * w if inv_diag is not None else w
-    gamma = dot_f32(r, u)
-    delta = dot_f32(w, u)
-    uu = dot_f32(u, u)
-    return z, q, s, p, x, r, u, w, m, jnp.stack([gamma, delta, uu])
-
-
-def _vma_dots_pallas(z, q, s, p, x, r, u, w, n, m, inv_diag, alpha, beta):
-    from ..kernels.fused_vma import fused_vma_dots
-
-    inv = inv_diag if inv_diag is not None else jnp.ones_like(w)
-    return fused_vma_dots(z, q, s, p, x, r, u, w, n, m, inv, alpha, beta)
-
-
-@partial(jax.jit, static_argnames=("maxiter", "engine", "replace_every"))
-def _pipecg_impl(A, b, M, x0, atol, rtol, maxiter: int, engine: str, replace_every: int):
-    dtype = b.dtype
+@partial(jax.jit, static_argnames=("maxiter", "engine", "spmv_engine", "replace_every"))
+def _pipecg_impl(
+    A, b, M, x0, atol, rtol, maxiter: int, engine: str, spmv_engine: str, replace_every: int
+):
+    # Jacobi fuses into the iteration core; any other PC is applied per
+    # iteration by the loop (inv_diag=None -> m = pc_fn(w)).
     inv_diag = M.inv_diag if isinstance(M, JacobiPC) else None
-    core = _vma_dots_pallas if engine == "pallas" else _vma_dots_jnp
-    if engine == "pallas" and inv_diag is None and not isinstance(M, JacobiPC):
-        # fused kernel folds the Jacobi PC; identity PC = ones
-        inv_diag = jnp.ones_like(b)
-
-    # init (lines 1-3)
-    r0 = b - spmv(A, x0)
-    u0 = apply_pc(M, r0)
-    w0 = spmv(A, u0)
-    gamma0 = dot_f32(r0, u0)
-    delta0 = dot_f32(w0, u0)
-    norm0 = jnp.sqrt(dot_f32(u0, u0))
-    m0 = apply_pc(M, w0)
-    n0 = spmv(A, m0)
-    thresh = jnp.maximum(atol, rtol * norm0)
-    hist0 = jnp.full((maxiter + 1,), jnp.nan, dtype=jnp.float32).at[0].set(norm0.astype(jnp.float32))
-    zv = jnp.zeros_like(b)
-
-    def cond(state):
-        i = state[0]
-        norm = state[-2]
-        return (i < maxiter) & (norm > thresh)
-
-    def body(state):
-        (i, x, r, u, w, z, q, s, p, m, n,
-         gamma, gamma_prev, delta, alpha_prev, norm, hist) = state
-        # scalars (lines 5-9) — consume *previous* iteration's reductions
-        beta = jnp.where(i > 0, gamma / gamma_prev, 0.0)
-        alpha = jnp.where(
-            i > 0, gamma / (delta - beta * gamma / alpha_prev), gamma / delta
-        )
-        beta_t = beta.astype(dtype)
-        alpha_t = alpha.astype(dtype)
-        # fused VMA pipeline + PC + dot partials (lines 10-21)
-        z, q, s, p, x, r, u, w, m, dots = core(
-            z, q, s, p, x, r, u, w, n, m, inv_diag, alpha_t, beta_t
-        )
-        if inv_diag is None:
-            m = apply_pc(M, w)
-        gamma_new, delta_new, uu = dots[0], dots[1], dots[2]
-        # SPMV (line 22) — independent of the dots: overlap target
-        n = spmv(A, m)
-        norm_new = jnp.sqrt(uu)
-
-        if replace_every > 0:
-            # Residual replacement (Cools & Vanroose): periodically re-derive
-            # every auxiliary vector from its definition to arrest the
-            # recurrence roundoff drift that plain PIPECG accumulates.
-            def _replace(args):
-                x, p, *_ = args
-                r = b - spmv(A, x)
-                u = apply_pc(M, r)
-                w = spmv(A, u)
-                s = spmv(A, p)
-                q = apply_pc(M, s)
-                z = spmv(A, q)
-                m = apply_pc(M, w)
-                n = spmv(A, m)
-                gamma = dot_f32(r, u)
-                delta = dot_f32(w, u)
-                norm = jnp.sqrt(dot_f32(u, u))
-                return x, p, r, u, w, s, q, z, m, n, gamma, delta, norm
-
-            do_rr = (i > 0) & (jnp.mod(i + 1, replace_every) == 0)
-            (x, p, r, u, w, s, q, z, m, n, gamma_new, delta_new, norm_new) = jax.lax.cond(
-                do_rr,
-                _replace,
-                lambda args: args,
-                (x, p, r, u, w, s, q, z, m, n, gamma_new, delta_new, norm_new),
-            )
-
-        hist = hist.at[i + 1].set(norm_new.astype(jnp.float32))
-        return (
-            i + 1, x, r, u, w, z, q, s, p, m, n,
-            gamma_new, gamma, delta_new, alpha, norm_new, hist,
-        )
-
-    acc = gamma0.dtype
-    state = (
-        jnp.int32(0), x0, r0, u0, w0, zv, zv, zv, zv, m0, n0,
-        gamma0, jnp.ones((), acc), delta0, jnp.ones((), acc), norm0, hist0,
+    i, x, norm, converged, hist = run_pipecg(
+        b,
+        x0,
+        spmv_fn=lambda v: spmv(A, v, engine=spmv_engine),
+        pc_fn=lambda r: apply_pc(M, r),
+        core=get_core(engine),
+        inv_diag=inv_diag,
+        atol=atol,
+        rtol=rtol,
+        maxiter=maxiter,
+        replace_every=replace_every,
     )
-    out = jax.lax.while_loop(cond, body, state)
-    i, x, norm, hist = out[0], out[1], out[-2], out[-1]
-    return SolveResult(x=x, iterations=i, residual_norm=norm, converged=norm <= thresh, history=hist)
+    return SolveResult(x=x, iterations=i, residual_norm=norm, converged=converged, history=hist)
 
 
 def pipecg(
@@ -154,6 +52,7 @@ def pipecg(
     rtol: float = 0.0,
     maxiter: int = 10000,
     engine: str = "jnp",
+    spmv_engine: str | None = None,
     replace_every: int = 0,
 ) -> SolveResult:
     """Solve SPD ``A x = b`` with Pipelined PCG (Algorithm 2).
@@ -162,6 +61,10 @@ def pipecg(
     engine="pallas" — fused single-pass Pallas kernel for the 8 VMAs +
                       Jacobi PC + dot partials (the paper's kernel-fusion
                       optimization, §V-B, extended to fold the dots).
+    engine="auto"   — pallas on TPU, jnp elsewhere.
+    spmv_engine     — SPMV dispatch engine ("jnp"/"pallas"/"auto"); defaults
+                      to following ``engine`` so `engine="pallas"` runs the
+                      whole iteration (core AND SPMV) on Pallas kernels.
     replace_every   — if > 0, re-derive all auxiliary vectors from their
                       definitions every k iterations (residual replacement;
                       beyond-paper stability feature for low precision /
@@ -171,6 +74,9 @@ def pipecg(
         M = identity()
     if x0 is None:
         x0 = jnp.zeros_like(b)
+    if spmv_engine is None:
+        spmv_engine = engine if engine in ("pallas", "auto") else "jnp"
     return _pipecg_impl(
-        A, b, M, x0, jnp.float32(atol), jnp.float32(rtol), maxiter, engine, replace_every
+        A, b, M, x0, jnp.float32(atol), jnp.float32(rtol),
+        maxiter, engine, spmv_engine, replace_every,
     )

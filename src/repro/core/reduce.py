@@ -1,0 +1,81 @@
+"""Reduction strategies for the PIPECG dot products.
+
+One iteration of PIPECG produces three scalar partials — gamma = (r, u),
+delta = (w, u) and ||u||^2 = (u, u). *How* those partials become global
+scalars is the axis along which the paper's hybrid methods differ, so it
+is factored out as a strategy the shared iteration core is parameterized
+over (``core.iteration.run_pipecg``):
+
+``local``     — identity: the partials already are the global dots
+                (single-device execution).
+``separate``  — three independent ``psum`` collectives (Hybrid-PIPECG-1:
+                the paper's three separate async copies, maximally
+                overlappable but 3x the collective count).
+``packed``    — the three partials stacked into ONE length-3 ``psum``
+                (Hybrid-PIPECG-2/3: the paper's copy-shrinking trick
+                applied to reduction latency, 3 collectives -> 1).
+
+New strategies (e.g. a two-phase hierarchical reduction across pods, or a
+delayed/asynchronous reduction) plug in via ``register_reducer`` without
+touching the solver loop.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Reducer", "make_reducer", "register_reducer", "reducer_names"]
+
+# A Reducer maps the three local dot partials to the three global dots.
+Reducer = Callable[[jax.Array, jax.Array, jax.Array], Tuple[jax.Array, jax.Array, jax.Array]]
+
+
+def _local(g, d, nn):
+    return g, d, nn
+
+
+def _separate(axis: str) -> Reducer:
+    def reduce(g, d, nn):
+        return (
+            jax.lax.psum(g, axis),
+            jax.lax.psum(d, axis),
+            jax.lax.psum(nn, axis),
+        )
+
+    return reduce
+
+
+def _packed(axis: str) -> Reducer:
+    def reduce(g, d, nn):
+        packed = jax.lax.psum(jnp.stack([g, d, nn]), axis)
+        return packed[0], packed[1], packed[2]
+
+    return reduce
+
+
+# factory(axis) -> Reducer; axis is None for strategies that need no mesh
+_REDUCERS: Dict[str, Callable[[Optional[str]], Reducer]] = {
+    "local": lambda axis: _local,
+    "separate": lambda axis: _separate(axis),
+    "packed": lambda axis: _packed(axis),
+}
+
+
+def register_reducer(name: str, factory: Callable[[Optional[str]], Reducer]) -> None:
+    """Register a reduction strategy: ``factory(axis_name) -> Reducer``."""
+    _REDUCERS[name] = factory
+
+
+def reducer_names() -> Tuple[str, ...]:
+    return tuple(sorted(_REDUCERS))
+
+
+def make_reducer(strategy: str, axis: Optional[str] = None) -> Reducer:
+    """Build the Reducer for ``strategy`` over mesh axis ``axis``."""
+    if strategy not in _REDUCERS:
+        raise ValueError(f"unknown reduction strategy {strategy!r}; have {reducer_names()}")
+    if strategy != "local" and axis is None:
+        raise ValueError(f"reduction strategy {strategy!r} needs a mesh axis name")
+    return _REDUCERS[strategy](axis)

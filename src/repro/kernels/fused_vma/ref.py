@@ -1,11 +1,9 @@
 """Pure-jnp oracle for the fused PIPECG iteration core.
 
-One PIPECG iteration's vector work (Alg. 2 lines 10-21 + dot partials):
-
-    z = n + beta*z ; q = m + beta*q ; s = w + beta*s ; p = u + beta*p
-    x += alpha*p ; r -= alpha*s ; u -= alpha*q ; w -= alpha*z
-    m = inv_diag * w                       (Jacobi PC, fused)
-    dots = [ (r,u), (w,u), (u,u) ]         (float32 accumulation)
+Delegates to the ONE canonical recurrence (``core.iteration.
+pipecg_vma_core``) so the kernel is validated against exactly the math the
+solvers run; this module only adapts the dot partials to the kernel's
+stacked-float32 output contract.
 """
 from __future__ import annotations
 
@@ -14,17 +12,9 @@ import jax.numpy as jnp
 
 
 def fused_vma_dots_ref(z, q, s, p, x, r, u, w, n, m, inv_diag, alpha, beta):
+    from ...core.iteration import pipecg_vma_core
+
     alpha = jnp.asarray(alpha, dtype=z.dtype)
     beta = jnp.asarray(beta, dtype=z.dtype)
-    z = n + beta * z
-    q = m + beta * q
-    s = w + beta * s
-    p = u + beta * p
-    x = x + alpha * p
-    r = r - alpha * s
-    u = u - alpha * q
-    w = w - alpha * z
-    m = inv_diag * w
-    rf, uf, wf = (a.astype(jnp.float32) for a in (r, u, w))
-    dots = jnp.stack([jnp.sum(rf * uf), jnp.sum(wf * uf), jnp.sum(uf * uf)])
-    return z, q, s, p, x, r, u, w, m, dots
+    *vecs, (g, d, nn) = pipecg_vma_core(z, q, s, p, x, r, u, w, n, m, inv_diag, alpha, beta)
+    return (*vecs, jnp.stack([g, d, nn]).astype(jnp.float32))

@@ -133,6 +133,8 @@ def _lower_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, rules, variant: dict 
 
 def _cost(compiled) -> dict:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older JAX: one dict per device
+        ca = ca[0] if ca else {}
     return {"flops": float(ca.get("flops", 0.0)), "bytes": float(ca.get("bytes accessed", 0.0))}
 
 

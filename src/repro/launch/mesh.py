@@ -10,7 +10,8 @@ pod-major (cheapest collective crosses the slowest fabric exactly once).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from ..compat import AxisType, make_mesh
 
 __all__ = ["make_production_mesh", "make_solver_mesh_from", "DATA_AXES", "MODEL_AXIS"]
 
@@ -31,7 +32,7 @@ def make_production_mesh(*, multi_pod: bool = False):
             "the dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             "before any jax import"
         )
-    return jax.make_mesh(shape, axes, devices=devs[:n], axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, devices=devs[:n], axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_solver_mesh_from(mesh) -> "jax.sharding.Mesh":

@@ -1,31 +1,17 @@
 """Solver launcher: ``python -m repro.launch.solve --matrix poisson125:16``
 
-Single-device or distributed (--shards N, needs that many devices — on CPU
-set XLA_FLAGS=--xla_force_host_platform_device_count=N before launch).
+Thin CLI over the ``repro.solve`` registry. Single-device or distributed
+(--shards N, needs that many devices — on CPU set
+XLA_FLAGS=--xla_force_host_platform_device_count=N before launch).
 """
 from __future__ import annotations
 
 import argparse
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
-from ..core import chronopoulos_cg, jacobi, pcg, pipecg
-from ..core.distributed import make_solver_mesh, pipecg_distributed
-from ..core.perfmodel import decompose
-from ..sparse import (
-    balanced_rows,
-    poisson7,
-    poisson27,
-    poisson125,
-    shard_dia,
-    shard_vector,
-    spmv,
-    synthetic_spd_dia,
-    table1_matrix,
-    unshard_vector,
-)
+from .. import solve, solver_names
+from ..sparse import poisson7, poisson27, poisson125, spmv, synthetic_spd_dia, table1_matrix
 
 GENS = {"poisson7": poisson7, "poisson27": poisson27, "poisson125": poisson125}
 
@@ -43,9 +29,11 @@ def build_matrix(spec: str):
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--matrix", default="poisson27:12")
-    ap.add_argument("--solver", default="pipecg", choices=["pcg", "chronopoulos", "pipecg"])
-    ap.add_argument("--engine", default="jnp", choices=["jnp", "pallas"])
-    ap.add_argument("--method", default="h3", choices=["h1", "h2", "h3"])
+    ap.add_argument("--method", default=None, choices=sorted(set(solver_names())),
+                    help="solver method; h1/h2/h3 are distributed (set --shards); "
+                         "default: pipecg, or h3 when --shards > 1")
+    ap.add_argument("--solver", default=None, help="deprecated alias for --method")
+    ap.add_argument("--engine", default="auto", choices=["auto", "jnp", "pallas"])
     ap.add_argument("--shards", type=int, default=1)
     ap.add_argument("--atol", type=float, default=1e-5)
     ap.add_argument("--maxiter", type=int, default=10000)
@@ -56,36 +44,33 @@ def main(argv=None):
     A = build_matrix(args.matrix)
     xstar = jnp.ones((A.n,)) / jnp.sqrt(A.n)
     b = spmv(A, xstar)
-    M = jacobi(A)
     print(f"matrix {args.matrix}: N={A.n} nnz/N={A.nnz()/A.n:.1f} bw={A.bandwidth}")
 
+    distributed = ("h1", "h2", "h3", "pipecg_distributed")
+    method = args.solver or args.method
+    kw = {}
     if args.shards > 1:
-        if len(jax.devices()) < args.shards:
-            raise SystemExit(
-                f"need {args.shards} devices; set XLA_FLAGS=--xla_force_host_platform_device_count={args.shards}"
-            )
-        bounds = (
-            decompose(A, args.shards) if args.weighted else balanced_rows(A.n, args.shards)
-        )
-        As = shard_dia(A, bounds)
-        mesh = make_solver_mesh(args.shards)
-        res = pipecg_distributed(
-            As, shard_vector(b, bounds), shard_vector(M.inv_diag, bounds),
-            mesh=mesh, method=args.method, atol=args.atol, maxiter=args.maxiter,
-        )
-        x = unshard_vector(res.x, bounds)
+        if method is None:
+            method = "h3"
+        elif method not in distributed:
+            ap.error(f"--method {method} is single-device; with --shards use one of {distributed}")
+        kw = {"shards": args.shards, "partition": "nnz" if args.weighted else "rows"}
     else:
-        solver = {"pcg": pcg, "chronopoulos": chronopoulos_cg, "pipecg": pipecg}[args.solver]
-        kw = {}
-        if args.solver == "pipecg":
-            kw = {"engine": args.engine, "replace_every": args.replace_every}
-        res = solver(A, b, M=M, atol=args.atol, maxiter=args.maxiter, **kw)
-        x = res.x
+        if method is None:
+            method = "pipecg"
+        elif method in distributed:
+            ap.error(f"--method {method} is distributed; set --shards > 1")
+        if method == "pipecg":
+            kw = {"replace_every": args.replace_every}
+    res = solve(
+        A, b, method=method, engine=args.engine, M="jacobi",
+        atol=args.atol, maxiter=args.maxiter, **kw,
+    )
 
-    err = float(jnp.linalg.norm(x - xstar))
-    true_res = float(jnp.linalg.norm(b - spmv(A, x)))
+    err = float(jnp.linalg.norm(res.x - xstar))
+    true_res = float(jnp.linalg.norm(b - spmv(A, res.x)))
     print(
-        f"iters={int(res.iterations)} converged={bool(res.converged)} "
+        f"method={method} iters={int(res.iterations)} converged={bool(res.converged)} "
         f"|u|={float(res.residual_norm):.2e} |x-x*|={err:.2e} true_res={true_res:.2e}"
     )
 

@@ -1,8 +1,14 @@
-"""Batched serving engine: prefill once, decode greedily/with temperature.
+"""Batched serving engines.
 
-The decode loop is a single jitted ``lax.while_loop`` (token-at-a-time with
-the family's cache/state), so serving lowers to one XLA program — the form
+LM serving: prefill once, decode greedily/with temperature. The decode
+loop is a single jitted ``lax.while_loop`` (token-at-a-time with the
+family's cache/state), so serving lowers to one XLA program — the form
 the dry-run compiles for decode_32k / long_500k.
+
+Solver serving: ``SolverEngine`` pins one operator + method/engine choice
+from the ``repro.solve`` registry and serves many right-hand sides —
+single solves reuse the jit cache (same A pytree structure), batches are
+vmapped into one XLA program.
 """
 from __future__ import annotations
 
@@ -14,7 +20,7 @@ import jax.numpy as jnp
 
 from ..models.zoo import ModelApi
 
-__all__ = ["ServeConfig", "generate", "make_decode_step"]
+__all__ = ["ServeConfig", "SolverEngine", "generate", "make_decode_step"]
 
 
 @dataclass(frozen=True)
@@ -100,3 +106,73 @@ def _copy_prefill(api: ModelApi, cache, pf_cache, T: int, batch: dict):
         v = jax.lax.dynamic_update_slice(cache.self_kv.v, pf_cache.self_kv.v, (0, 0, 0, 0, 0))
         return cache._replace(self_kv=type(cache.self_kv)(k=k, v=v), img_feats=batch["img_feats"])
     raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# solver serving (repro.solve registry)
+# ---------------------------------------------------------------------------
+
+class SolverEngine:
+    """Serve many right-hand sides against one pinned operator.
+
+    The operator, preconditioner, method and engine are fixed at
+    construction (amortizing jit compilation across requests);
+    ``solve``/``solve_batch`` then accept arbitrary rhs traffic:
+
+        eng = SolverEngine(A, method="pipecg", engine="pallas", atol=1e-6)
+        res  = eng.solve(b)            # one rhs
+        many = eng.solve_batch(B)      # (k, n): ONE vmapped XLA program
+
+    Distributed methods (h1/h2/h3) are served too, but each request runs
+    sequentially (shard_map does not nest under vmap) and currently
+    re-shards the operator per call — an operator-handle cache is a
+    ROADMAP item; size latency-sensitive deployments accordingly.
+    """
+
+    def __init__(
+        self,
+        A,
+        M="jacobi",
+        method: str = "pipecg",
+        engine: str = "auto",
+        atol: float = 1e-5,
+        rtol: float = 0.0,
+        maxiter: int = 10000,
+        **method_kwargs,
+    ):
+        from ..api import solve  # lazy: keep serve importable without solver deps
+        from ..core.distributed import method_names
+
+        self._solve = solve
+        self.A = A
+        self.M = M
+        self.method = method
+        self.engine = engine
+        self.atol = atol
+        self.rtol = rtol
+        self.maxiter = maxiter
+        self.method_kwargs = method_kwargs
+        self._distributed = method in method_names() or method == "pipecg_distributed"
+        self._vmapped = None
+
+    def solve(self, b: jax.Array):
+        """Solve for a single rhs ``b`` of shape (n,)."""
+        return self._solve(
+            self.A, b, method=self.method, engine=self.engine, M=self.M,
+            atol=self.atol, rtol=self.rtol, maxiter=self.maxiter, **self.method_kwargs,
+        )
+
+    def solve_batch(self, bs: jax.Array):
+        """Solve a batch of rhs, shape (k, n) -> SolveResult with leading k.
+
+        Per-lane results are exact (vmap's while_loop rule freezes a lane's
+        state once its own convergence test fires, so iterations/history are
+        per-rhs), but wall-clock is set by the slowest rhs in the batch —
+        group rhs of similar difficulty when latency matters.
+        """
+        if self._distributed:
+            results = [self.solve(b) for b in bs]
+            return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *results)
+        if self._vmapped is None:
+            self._vmapped = jax.vmap(self.solve)
+        return self._vmapped(bs)

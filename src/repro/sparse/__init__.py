@@ -16,7 +16,7 @@ from .partition import (
     shard_vector,
     unshard_vector,
 )
-from .spmv import shifted, spmv, spmv_bell, spmv_dia
+from .spmv import register_spmv, shifted, spmv, spmv_bell, spmv_dia, spmv_engines
 from .stencil import poisson7, poisson27, poisson125, poisson_dia, stencil_offsets
 from .synthetic import TABLE1, synthetic_spd_dia, table1_matrix
 
@@ -37,12 +37,14 @@ __all__ = [
     "poisson27",
     "poisson125",
     "poisson_dia",
+    "register_spmv",
     "shard_dia",
     "shard_vector",
     "shifted",
     "spmv",
     "spmv_bell",
     "spmv_dia",
+    "spmv_engines",
     "stencil_offsets",
     "synthetic_spd_dia",
     "table1_matrix",

@@ -1,16 +1,39 @@
-"""Reference (pure-jnp) SPMV implementations for every device format.
+"""SPMV engine dispatch — one entry point, per-format/per-engine backends.
 
-These are the oracles the Pallas kernels are validated against and the
-fallback path on platforms without Pallas support.
+``spmv(A, x, engine=...)`` routes on (matrix type, engine) through a
+registry instead of a hard-coded isinstance chain:
+
+    format      engine="jnp"        engine="pallas"
+    ---------   -----------------   ------------------------------------
+    DIAMatrix   spmv_dia (shifts)   kernels.spmv_dia (banded TPU kernel)
+    BellMatrix  spmv_bell (gather)  kernels.spmv_bell (Block-ELLPACK)
+    jax.Array   A @ x               — (falls back to jnp)
+
+``engine="auto"`` picks pallas on TPU and jnp elsewhere; an engine that is
+not registered for the format falls back to jnp, so callers can request
+"pallas" unconditionally. New formats/backends plug in via
+``register_spmv`` without touching any solver code.
+
+The jnp implementations double as the oracles the Pallas kernels are
+validated against (tests/test_kernels.py, tests/test_sparse.py).
 """
 from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from .formats import BellMatrix, DIAMatrix
 
-__all__ = ["spmv", "spmv_dia", "spmv_bell", "shifted"]
+__all__ = [
+    "spmv",
+    "spmv_dia",
+    "spmv_bell",
+    "shifted",
+    "register_spmv",
+    "spmv_engines",
+]
 
 
 def shifted(x: jax.Array, offset: int) -> jax.Array:
@@ -36,11 +59,68 @@ def spmv_bell(A: BellMatrix, x: jax.Array) -> jax.Array:
     return (A.vals * gathered).sum(axis=1)
 
 
-def spmv(A, x: jax.Array) -> jax.Array:
-    if isinstance(A, DIAMatrix):
-        return spmv_dia(A, x)
-    if isinstance(A, BellMatrix):
+def _spmv_dense(A, x: jax.Array) -> jax.Array:
+    return A @ x
+
+
+def _spmv_dia_pallas(A: DIAMatrix, x: jax.Array) -> jax.Array:
+    from ..kernels.spmv_dia import spmv_dia_pallas  # lazy: avoid import cycle
+
+    return spmv_dia_pallas(A, x)
+
+
+def _spmv_bell_pallas(A: BellMatrix, x: jax.Array) -> jax.Array:
+    from ..kernels.spmv_bell import spmv_bell_pallas
+    from ..kernels.spmv_bell.ops import _VMEM_ROWS_LIMIT
+
+    if A.n > _VMEM_ROWS_LIMIT:  # kernel keeps x resident in VMEM
         return spmv_bell(A, x)
+    return spmv_bell_pallas(A, x)
+
+
+# (matrix type) -> (engine name) -> fn(A, x) -> y
+_REGISTRY: Dict[type, Dict[str, Callable]] = {}
+
+
+def register_spmv(mat_type: type, engine: str, fn: Callable) -> None:
+    """Register an SPMV backend for ``mat_type`` under ``engine``."""
+    _REGISTRY.setdefault(mat_type, {})[engine] = fn
+
+
+register_spmv(DIAMatrix, "jnp", spmv_dia)
+register_spmv(DIAMatrix, "pallas", _spmv_dia_pallas)
+register_spmv(BellMatrix, "jnp", spmv_bell)
+register_spmv(BellMatrix, "pallas", _spmv_bell_pallas)
+
+
+def _engines_for(A) -> Dict[str, Callable]:
+    # merge along the MRO: a subclass inherits its base format's engines
+    # and may override/extend them
+    table: Dict[str, Callable] = {}
+    for klass in reversed(type(A).__mro__):
+        table.update(_REGISTRY.get(klass, {}))
+    if table:
+        return table
     if isinstance(A, jax.Array) or hasattr(A, "ndim"):
-        return A @ x
+        return {"jnp": _spmv_dense}
     raise TypeError(f"unsupported matrix type {type(A)}")
+
+
+def spmv_engines(A) -> Tuple[str, ...]:
+    """Engine names available for this matrix (after fallback: always >=1)."""
+    return tuple(sorted(_engines_for(A)))
+
+
+def spmv(A, x: jax.Array, engine: str = "auto") -> jax.Array:
+    """y = A @ x through the engine registry.
+
+    engine="auto" — pallas on TPU (when registered), jnp elsewhere.
+    An engine not registered for this format falls back to "jnp".
+    """
+    table = _engines_for(A)
+    if engine == "auto":
+        engine = "pallas" if jax.default_backend() == "tpu" and "pallas" in table else "jnp"
+    fn = table.get(engine) or table.get("jnp")
+    if fn is None:
+        raise ValueError(f"no SPMV engine {engine!r} (or jnp fallback) for {type(A).__name__}")
+    return fn(A, x)
