@@ -2,20 +2,22 @@
 
 Matrices: synthetic analogues of the paper's SuiteSparse Table I (matched
 N and nnz/N; big ones scaled to CPU size) + a 27-pt Poisson. Methods are
-rows of the ``repro.solve`` registry: PCG (the paper's Paralution/PETSc
-baseline algorithm), Chronopoulos-Gear, PIPECG (Alg. 2), and PIPECG with
-the fused Pallas iteration core.
+rows of the solver registry, executed through the plan/execute API: one
+``repro.plan`` per (matrix, method) pins the compiled loop outside the
+timed region — the timer sees pure iteration cost, exactly the quantity
+the paper's speedups are made of (all variants converge in the same
+#iterations, verified in `derived`).
 
-Reported: time per solver ITERATION (us) — the paper's speedups are
-iteration-cost driven since all variants converge in the same #iterations
-(verified in `derived`).
+``--tiny`` runs a seconds-scale subset through the same plan path — the
+CI smoke mode that keeps the serving workflow exercised on every push.
 """
 from __future__ import annotations
 
-import jax
+import argparse
+
 import jax.numpy as jnp
 
-from repro import solve
+import repro
 from repro.sparse import poisson27, spmv, table1_matrix
 
 from .common import emit, timeit_call
@@ -28,7 +30,11 @@ MATRICES = [
     ("poisson27-20", lambda: poisson27(20)),                          # N=8000
 ]
 
-# (method, engine) rows of the repro.solve registry
+TINY_MATRICES = [
+    ("poisson27-6", lambda: poisson27(6)),                            # N=216
+]
+
+# (method, engine) rows of the solver registry
 METHODS = {
     "pcg": ("pcg", "jnp"),
     "chrono": ("chronopoulos", "jnp"),
@@ -37,25 +43,25 @@ METHODS = {
 }
 
 
-def main(iters_per_solve: int = 40):
-    for mname, gen in MATRICES:
+def main(iters_per_solve: int = 40, tiny: bool = False):
+    matrices = TINY_MATRICES if tiny else MATRICES
+    if tiny:
+        iters_per_solve = min(iters_per_solve, 10)
+    for mname, gen in matrices:
         A = gen()
         xstar = jnp.ones((A.n,)) / jnp.sqrt(A.n)
         b = spmv(A, xstar)
         # convergence equivalence (the paper's correctness premise)
         its = {
-            k: int(solve(A, b, method=k, M="jacobi", atol=1e-5, maxiter=2000).iterations)
+            k: int(repro.solve(A, b, method=k, M="jacobi", atol=1e-5, maxiter=2000).iterations)
             for k in ("pcg", "pipecg")
         }
         for meth, (method, engine) in METHODS.items():
-            us = timeit_call(
-                lambda: solve(
-                    A, b, method=method, engine=engine, M="jacobi",
-                    atol=0.0, maxiter=iters_per_solve,
-                ),
-                warmup=1,
-                iters=3,
-            )
+            # plan outside the timed region: the timer sees iteration cost only
+            p = repro.plan(A, method=method, engine=engine, M="jacobi",
+                           atol=0.0, maxiter=iters_per_solve)
+            us = timeit_call(lambda: p.solve(b), warmup=1, iters=3)
+            assert p.trace_count == 1, (meth, p.trace_count)  # plan reuse, not re-trace
             emit(
                 f"solver/{mname}/{meth}",
                 us / iters_per_solve,
@@ -64,4 +70,9 @@ def main(iters_per_solve: int = 40):
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=40, help="iterations per timed solve")
+    ap.add_argument("--tiny", action="store_true",
+                    help="seconds-scale CI smoke: tiny matrix, few iterations")
+    args = ap.parse_args()
+    main(iters_per_solve=args.iters, tiny=args.tiny)

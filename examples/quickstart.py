@@ -1,22 +1,57 @@
-"""Quickstart: solve a 27-pt Poisson system with every CG variant.
+"""Quickstart: plan once, solve many — the plan/execute workflow.
 
-Everything goes through the one registry entry point ``repro.solve`` —
-methods and kernel engines are configuration, not different APIs.
+The paper's whole premise is that PIPECG setup (preconditioner, data
+decomposition, compiled iteration loop) is paid once while the loop runs
+many times. ``repro.plan`` is that split made explicit:
+
+    p = repro.plan(A, method="pipecg", M="jacobi")   # setup, paid once
+    p.solve(b)                                        # any number of rhs
+    p.solve_batched(B)                                # one vmapped program
+
+``repro.solve`` stays available as the one-shot form (it reuses plans
+from a keyed cache under the hood), and matrix-free operators plug into
+the same plans via ``FunctionOperator``.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax.numpy as jnp
 
-from repro import solve
-from repro.sparse import poisson27, spmv
+import repro
+from repro.sparse import FunctionOperator, poisson27, spmv
 
 
 def main():
     A = poisson27(16)  # 4096 unknowns, SPD, nnz/N ~ 26
     xstar = jnp.ones((A.n,)) / jnp.sqrt(A.n)  # paper's exact solution 1/sqrt(N)
     b = spmv(A, xstar)
-
     print(f"A: N={A.n}  nnz/N={A.nnz()/A.n:.1f}  bandwidth={A.bandwidth}")
+
+    # --- plan once ---
+    p = repro.plan(A, method="pipecg", M="jacobi", atol=1e-6, maxiter=500)
+    desc = p.describe()
+    print("plan:", ", ".join(f"{k}={desc[k]}" for k in ("method", "engine", "preconditioner", "n")))
+
+    # --- ...then serve right-hand sides against the pinned program ---
+    res = p.solve(b)
+    print(
+        f"solve:   iters={int(res.iterations):3d}  |x-x*|="
+        f"{float(jnp.linalg.norm(res.x - xstar)):.2e}  traces={p.trace_count}"
+    )
+    B = jnp.stack([b, 2.0 * b, -0.5 * b, b + 1e-3])
+    batch = p.solve_batched(B)  # ONE vmapped XLA program for all four
+    print(
+        f"batched: {B.shape[0]} rhs in one program, "
+        f"iters={[int(i) for i in batch.iterations]}  traces={p.trace_count}"
+    )
+
+    # --- matrix-free: the same plan machinery, no materialized matrix ---
+    op = FunctionOperator(fn=lambda v: spmv(A, v), n=A.n, out_dtype=b.dtype,
+                          diag=A.diagonal())  # diag enables M="jacobi"
+    mf = repro.plan(op, method="pipecg", M="jacobi", atol=1e-6, maxiter=500).solve(b)
+    print(f"matrix-free FunctionOperator: iters={int(mf.iterations):3d}  "
+          f"|x-x*|={float(jnp.linalg.norm(mf.x - xstar)):.2e}")
+
+    # --- one-shot form: every CG variant through the same registry ---
     for name, method, kw in [
         ("PCG (Alg 1)           ", "pcg", {}),
         ("Chronopoulos-Gear     ", "chronopoulos", {}),
@@ -24,13 +59,12 @@ def main():
         ("PIPECG + fused kernels", "pipecg", {"engine": "pallas"}),
         ("PIPECG + residual-repl", "pipecg", {"replace_every": 25}),
     ]:
-        res = solve(A, b, method=method, M="jacobi", atol=1e-6, maxiter=500, **kw)
-        err = float(jnp.linalg.norm(res.x - xstar))
+        r = repro.solve(A, b, method=method, M="jacobi", atol=1e-6, maxiter=500, **kw)
         print(
-            f"{name}: iters={int(res.iterations):3d}  "
-            f"|u|={float(res.residual_norm):.2e}  |x-x*|={err:.2e}  "
-            f"converged={bool(res.converged)}"
+            f"{name}: iters={int(r.iterations):3d}  "
+            f"|u|={float(r.residual_norm):.2e}  converged={bool(r.converged)}"
         )
+    print("plan cache after the loop:", repro.plan_cache_stats())
 
 
 if __name__ == "__main__":

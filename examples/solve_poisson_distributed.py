@@ -2,10 +2,10 @@
 
 Runs on 8 virtual devices (the XLA flag below must precede the jax import),
 uses the performance model to decompose rows by nnz with a simulated slow
-device, and solves with the 2-D (local/halo overlap) schedule — all
-through the ``repro.solve`` registry: ``method="h3"`` is configuration
-(packed psum + halo SPMV) of the same shared iteration core the
-single-device reference runs.
+device, and solves with the 2-D (local/halo overlap) schedule. One
+``repro.plan`` carries all of the setup — decomposition, mesh, the
+``ShardedDIA`` operator handle, the compiled shard_map loop — and then
+serves several right-hand sides without repeating any of it.
 
     PYTHONPATH=src python examples/solve_poisson_distributed.py
 """
@@ -16,8 +16,8 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import jax.numpy as jnp
 import numpy as np
 
-from repro import solve
-from repro.core.perfmodel import decompose, relative_weights
+import repro
+from repro.core.perfmodel import relative_weights
 from repro.sparse import partition_stats, poisson125, spmv
 
 
@@ -32,22 +32,26 @@ def main():
     # --- the paper's performance model: one device measured 1.5x slower ---
     step_times = np.array([1.0, 1.0, 1.0, 1.5, 1.0, 1.0, 1.0, 1.0])
     weights = relative_weights(step_times)
-    bounds = decompose(A, P, weights=weights)
-    stats = partition_stats(A, bounds)
-    print("rows per shard:", np.diff(bounds).tolist())
+
+    # --- plan once: decomposition + mesh + ShardedDIA handle + compiled loop ---
+    p = repro.plan(A, method="h3", M="jacobi", shards=P, weights=weights,
+                   atol=1e-5,  # the paper's tolerance; f32 attainable at this N
+                   maxiter=1000)
+    print("rows per shard:", list(p.describe()["rows_per_shard"]))
+    stats = partition_stats(A, np.asarray(p.bounds))
     for i, s in enumerate(stats["shards"]):
         print(f"  shard {i}: rows={s['rows']:4d} nnz_local={s['nnz_local']:6d} nnz_halo={s['nnz_halo']:5d}")
 
-    res = solve(
-        A, b, method="h3", M="jacobi", shards=P, weights=weights,
-        atol=1e-5,  # the paper's tolerance; f32 attainable at this N
-        maxiter=1000,
-    )
-    ref = solve(A, b, method="pipecg", M="jacobi", atol=1e-5, maxiter=1000)
+    # --- serve several rhs through the one plan: nothing is re-sharded ---
+    res = p.solve(b)
+    for scale in (2.0, -1.0, 0.5):
+        p.solve(scale * b)
+    ref = repro.solve(A, b, method="pipecg", M="jacobi", atol=1e-5, maxiter=1000)
     print(
         f"h3 distributed: iters={int(res.iterations)} (single-device {int(ref.iterations)})  "
         f"|x - x_ref|={float(jnp.linalg.norm(res.x - ref.x)):.2e}  "
-        f"true residual={float(jnp.linalg.norm(b - spmv(A, res.x))):.2e}"
+        f"true residual={float(jnp.linalg.norm(b - spmv(A, res.x))):.2e}  "
+        f"traces after 4 rhs={p.trace_count}"
     )
 
 

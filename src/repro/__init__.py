@@ -5,17 +5,34 @@ Reproduction + beyond-paper optimization of Tiwari & Vadhiyar,
 Heterogeneous Architectures" (2021), re-targeted from CPU+GPU nodes to
 TPU pod meshes. See DESIGN.md for the mapping.
 
-Entry point: ``repro.solve(A, b, method=..., engine=...)`` — one registry
-over every solver method and kernel backend (see ``repro.api``).
+Entry points: ``repro.plan(A, ...)`` -> reusable ``SolverPlan`` (setup
+paid once, many right-hand sides), and the one-shot ``repro.solve(A, b,
+method=..., engine=...)`` over a keyed plan cache (see ``repro.plan`` /
+``repro.api``).
 """
 
-__version__ = "0.2.0"
+__version__ = "0.3.0"
 
-_API = ("solve", "register_solver", "solver_names")
+_API = (
+    "solve",
+    "plan",
+    "SolverPlan",
+    "register_solver",
+    "solver_names",
+    "plan_cache_stats",
+    "clear_plan_cache",
+)
 
 
 def __getattr__(name):
     # Lazy so `import repro` stays free of jax import cost/side effects.
+    if name == "plan":
+        # the submodule doubles as the entry point: it is callable
+        # (plan.__call__ == the plan() factory) and carries SolverPlan etc.
+        # importlib, not `from . import`: the latter re-enters __getattr__.
+        import importlib
+
+        return importlib.import_module(".plan", __name__)
     if name in _API:
         from . import api
 
@@ -24,4 +41,4 @@ def __getattr__(name):
 
 
 def __dir__():
-    return sorted(list(globals()) + list(_API))
+    return sorted(set(globals()) | set(_API))

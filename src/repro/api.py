@@ -1,6 +1,16 @@
-"""Top-level solver API: ``repro.solve(A, b, method=..., engine=...)``.
+"""Top-level solver API — one-shot ``solve`` over the plan/execute split.
 
-One entry point over every execution strategy of the same PIPECG math:
+``repro.plan(A, ...)`` is the primary entry point: it pays the setup cost
+(preconditioner, perf-model decomposition, mesh + ``ShardedDIA`` handle,
+jit trace of the iteration loop) exactly once and returns a reusable
+``SolverPlan`` (see ``repro.plan``'s module docstring).
+
+``repro.solve(A, b, method=..., engine=...)`` is the one-shot convenience
+form: a thin wrapper that fetches the matching plan from a keyed LRU cache
+(operator identity x method/engine/shards/weights/... configuration) and
+runs ``plan.solve(b)``. Repeated solves against the same operator and
+configuration therefore reuse the compiled loop and the sharded operator
+handle — serving-loop economics without holding a plan handle.
 
     method                          runs
     -----------------------------   --------------------------------------
@@ -13,127 +23,37 @@ One entry point over every execution strategy of the same PIPECG math:
 ``engine`` selects the kernel backend ("jnp", "pallas", "auto" = pallas on
 TPU) for the iteration core and the SPMV dispatch. ``M`` may be a
 preconditioner object, the string "jacobi" (default) or None/"identity".
+``A`` may be any ``LinearOperator`` — materialized (``DIAMatrix``/
+``BellMatrix``/``CSRMatrix``/dense) or matrix-free
+(``repro.sparse.FunctionOperator``) — for the non-distributed methods.
 
-The registry is open: ``register_solver`` adds new methods (e.g. future
-deflated/communication-avoiding variants) without touching call sites —
-``launch/solve.py``, ``serve.engine.SolverEngine``, the benchmarks and the
-examples all go through ``solve``.
+The registry is open: ``register_solver`` adds new (jit-traceable) methods
+without touching call sites — ``launch/solve.py``,
+``serve.engine.SolverEngine``, the benchmarks and the examples all go
+through plans.
 """
 from __future__ import annotations
 
-import inspect
-from typing import Callable, Dict, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from .core import chronopoulos_cg, identity, jacobi, pcg, pipecg
-from .core.distributed import make_solver_mesh, method_names, pipecg_distributed
-from .core.perfmodel import decompose
-from .core.preconditioners import IdentityPC, JacobiPC
 from .core.types import SolveResult
-from .sparse import DIAMatrix, balanced_rows, shard_dia, shard_vector, unshard_vector
+from .plan import (  # noqa: F401  (re-exported registry surface)
+    SolverPlan,
+    clear_plan_cache,
+    get_plan,
+    plan,
+    plan_cache_stats,
+    register_solver,
+    solver_names,
+)
 
-__all__ = ["solve", "register_solver", "solver_names"]
-
-
-def _resolve_pc(M, A):
-    if M is None or M == "identity" or M == "none":
-        return identity()
-    if M == "jacobi":
-        return jacobi(A)
-    if isinstance(M, str):
-        raise ValueError(f"unknown preconditioner name {M!r} (use 'jacobi'/'identity')")
-    return M
-
-
-def _require_jnp_engine(method: str, engine: str) -> None:
-    # honest failure instead of silently running jnp under a "pallas" label
-    if engine not in ("auto", "jnp"):
-        raise ValueError(
-            f"method {method!r} has no {engine!r} backend (the Pallas engines "
-            "apply to pipecg and the distributed methods); use engine='jnp'/'auto'"
-        )
-
-
-def _solve_pcg(A, b, *, M, x0, atol, rtol, maxiter, engine):
-    _require_jnp_engine("pcg", engine)
-    return pcg(A, b, M=M, x0=x0, atol=atol, rtol=rtol, maxiter=maxiter)
-
-
-def _solve_chronopoulos(A, b, *, M, x0, atol, rtol, maxiter, engine):
-    _require_jnp_engine("chronopoulos", engine)
-    return chronopoulos_cg(A, b, M=M, x0=x0, atol=atol, rtol=rtol, maxiter=maxiter)
-
-
-def _solve_pipecg(A, b, *, M, x0, atol, rtol, maxiter, engine,
-                  replace_every=0, spmv_engine=None):
-    return pipecg(
-        A, b, M=M, x0=x0, atol=atol, rtol=rtol, maxiter=maxiter,
-        engine=engine, spmv_engine=spmv_engine, replace_every=replace_every,
-    )
-
-
-def _solve_distributed(
-    A, b, *, M, x0, atol, rtol, maxiter, engine,
-    dist_method="h3", shards=1, weights=None, partition="rows", mesh=None,
-):
-    if not isinstance(A, DIAMatrix):
-        raise TypeError(f"distributed solve needs a DIAMatrix, got {type(A).__name__}")
-    if x0 is not None and float(jnp.max(jnp.abs(x0))) != 0.0:
-        raise ValueError("distributed solve supports x0=0 only")
-    if shards < 1:
-        raise ValueError(f"shards must be >= 1, got {shards}")
-    if len(jax.devices()) < shards:
-        raise RuntimeError(
-            f"need {shards} devices but only {len(jax.devices())} visible; on CPU set "
-            f"XLA_FLAGS=--xla_force_host_platform_device_count={shards} before importing jax"
-        )
-    if partition not in ("rows", "nnz"):
-        raise ValueError(f"unknown partition {partition!r} (use 'rows' or 'nnz')")
-    if weights is not None or partition == "nnz":
-        bounds = decompose(A, shards, weights=None if weights is None else np.asarray(weights))
-    else:
-        bounds = balanced_rows(A.n, shards)
-    if isinstance(M, JacobiPC):
-        inv_diag = M.inv_diag
-    elif isinstance(M, IdentityPC):
-        inv_diag = jnp.ones((A.n,), b.dtype)
-    else:
-        raise TypeError(f"distributed solve supports Jacobi/identity PCs, got {type(M).__name__}")
-    As = shard_dia(A, bounds)
-    res = pipecg_distributed(
-        As, shard_vector(b, bounds), shard_vector(inv_diag, bounds),
-        mesh=mesh if mesh is not None else make_solver_mesh(shards),
-        method=dist_method, engine=engine, atol=atol, rtol=rtol, maxiter=maxiter,
-    )
-    return SolveResult(
-        x=unshard_vector(res.x, bounds),
-        iterations=res.iterations,
-        residual_norm=res.residual_norm,
-        converged=res.converged,
-        history=res.history,
-    )
-
-
-SolverFn = Callable[..., SolveResult]
-
-_SOLVERS: Dict[str, SolverFn] = {
-    "pcg": _solve_pcg,
-    "chronopoulos": _solve_chronopoulos,
-    "pipecg": _solve_pipecg,
-    "pipecg_distributed": _solve_distributed,
-}
-
-
-def register_solver(name: str, fn: SolverFn) -> None:
-    """Register a new solve method: ``fn(A, b, *, M, x0, ...) -> SolveResult``."""
-    _SOLVERS[name] = fn
-
-
-def solver_names() -> Tuple[str, ...]:
-    return tuple(sorted(_SOLVERS)) + method_names()
+__all__ = [
+    "solve",
+    "plan",
+    "SolverPlan",
+    "register_solver",
+    "solver_names",
+    "plan_cache_stats",
+    "clear_plan_cache",
+]
 
 
 def solve(
@@ -148,28 +68,20 @@ def solve(
     maxiter: int = 10000,
     **kwargs,
 ) -> SolveResult:
-    """Solve SPD ``A x = b``; see module docstring for method/engine axes.
+    """Solve SPD ``A x = b`` once; see module docstring for method/engine axes.
 
     Extra keyword arguments are forwarded to the method implementation —
     e.g. ``replace_every`` (pipecg), ``shards``/``weights``/``partition``/
     ``mesh`` (distributed methods). A keyword the method does not accept
-    raises TypeError (nothing is silently dropped).
+    raises TypeError (nothing is silently dropped). Nonzero ``x0`` is
+    supported everywhere — distributed methods solve the shifted system
+    ``A d = b - A x0`` and return ``x0 + d``.
+
+    Internally this is ``get_plan(...).solve(b, ...)``: plans are cached
+    per (operator identity, configuration), so calling ``solve`` in a loop
+    re-traces nothing after the first call. Hold an explicit
+    ``repro.plan(...)`` handle when you want setup/teardown control or
+    batched execution (``plan.solve_batched``).
     """
-    if method in method_names():  # "h1"/"h2"/"h3" aliases
-        kwargs.setdefault("dist_method", method)
-        method = "pipecg_distributed"
-    if method not in _SOLVERS:
-        raise ValueError(f"unknown method {method!r}; have {solver_names()}")
-    fn = _SOLVERS[method]
-    params = inspect.signature(fn).parameters
-    if not any(p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()):
-        unknown = set(kwargs) - set(params)
-        if unknown:
-            raise TypeError(
-                f"method {method!r} does not accept {sorted(unknown)}; "
-                f"it takes {sorted(k for k in params if k not in ('A', 'b'))}"
-            )
-    return fn(
-        A, b, M=_resolve_pc(M, A), x0=x0, atol=atol, rtol=rtol,
-        maxiter=maxiter, engine=engine, **kwargs,
-    )
+    p = get_plan(A, method=method, engine=engine, M=M, maxiter=maxiter, **kwargs)
+    return p.solve(b, x0=x0, atol=atol, rtol=rtol)

@@ -28,8 +28,9 @@ Front-ends (thin configuration over the shared loop):
                     iteration core; spmv_engine routes the SPMV kernels)
   distributed.pipecg_distributed — h1/h2/h3 on a device mesh
 
-The top-level ``repro.solve(A, b, method=..., engine=...)`` registry
-(``repro.api``) unifies all of them.
+The top-level plan/execute API (``repro.plan`` -> reusable ``SolverPlan``,
+plus one-shot ``repro.solve`` over a keyed plan cache; see ``repro.plan``)
+unifies all of them and amortizes their setup across right-hand sides.
 """
 from .chronopoulos import chronopoulos_cg
 from .iteration import dot_f32, get_core, pipecg_vma_core, register_core, run_pipecg

@@ -45,10 +45,12 @@ from .types import SolveResult
 
 __all__ = [
     "pipecg_distributed",
+    "build_distributed_solver",
     "make_solver_mesh",
     "spmv_halo",
     "spmv_allgather",
     "DistMethod",
+    "get_method",
     "register_dist_spmv",
     "register_method",
     "method_names",
@@ -131,8 +133,17 @@ def spmv_halo(data, x, rows, offsets: Tuple[int, ...], hw: int, axis: str, n_sha
 _DIST_SPMV = {"allgather": spmv_allgather, "halo": spmv_halo}
 
 
-def register_dist_spmv(name: str, fn) -> None:
-    """Register a distributed SPMV strategy (uniform signature above)."""
+def register_dist_spmv(name: str, fn, *, overwrite: bool = False) -> None:
+    """Register a distributed SPMV strategy (uniform signature above).
+
+    Raises ValueError if ``name`` is already registered, unless
+    ``overwrite=True`` — silent replacement hides plug-in clashes.
+    """
+    if name in _DIST_SPMV and not overwrite:
+        raise ValueError(
+            f"distributed SPMV strategy {name!r} already registered; pass "
+            f"overwrite=True to replace it"
+        )
     _DIST_SPMV[name] = fn
 
 
@@ -156,10 +167,19 @@ _METHODS = {
 }
 
 
-def register_method(name: str, method: DistMethod) -> None:
-    """Register a new (reducer, spmv) combination as a named method."""
+def register_method(name: str, method: DistMethod, *, overwrite: bool = False) -> None:
+    """Register a new (reducer, spmv) combination as a named method.
+
+    Raises ValueError if ``name`` is already registered, unless
+    ``overwrite=True`` — silent replacement hides plug-in clashes.
+    """
     from .reduce import reducer_names
 
+    if name in _METHODS and not overwrite:
+        raise ValueError(
+            f"distributed method {name!r} already registered; pass "
+            f"overwrite=True to replace it"
+        )
     if method.spmv not in _DIST_SPMV:
         raise ValueError(
             f"unknown SPMV strategy {method.spmv!r}; register it first via "
@@ -177,36 +197,36 @@ def method_names() -> Tuple[str, ...]:
     return tuple(sorted(_METHODS))
 
 
+def get_method(name: str) -> DistMethod:
+    """Look up a registered distributed method (for introspection/plans)."""
+    if name not in _METHODS:
+        raise ValueError(f"method must be one of {method_names()}, got {name}")
+    return _METHODS[name]
+
+
 # ---------------------------------------------------------------------------
 # the distributed solver: shard_map around the shared loop
 # ---------------------------------------------------------------------------
 
-def pipecg_distributed(
+def build_distributed_solver(
     As: ShardedDIA,
-    b_sh: jax.Array,
-    inv_diag_sh: jax.Array,
     *,
     mesh: Mesh,
     axis: str = "rows",
     method: str = "h3",
     engine: str = "jnp",
-    atol: float = 1e-5,
-    rtol: float = 0.0,
     maxiter: int = 10000,
-) -> SolveResult:
-    """Distributed PIPECG on row-sharded banded A.
+):
+    """Build (once) the shard_map'd PIPECG program for one sharded operator.
 
-    As          — ShardedDIA from repro.sparse.shard_dia (h3 may use
-                  performance-model/unequal partitions; h1/h2 require equal).
-    b_sh        — (P, R) sharded rhs from shard_vector.
-    inv_diag_sh — (P, R) sharded Jacobi inverse diagonal (use ones for no PC).
-    engine      — iteration-core engine for the local block ("jnp"/"pallas"/
-                  "auto"), same registry as the single-device solver.
-    Returns SolveResult with x of shape (P*R,) padded; use unshard_vector.
+    This is the setup half of the plan/execute split: validation, strategy
+    lookup and the ``shard_map`` closure happen here; the returned
+    ``runner(b_sh, inv_diag_sh, atol, rtol) -> SolveResult`` only executes.
+    ``atol``/``rtol`` are traced arguments, so one built runner serves any
+    tolerance without recompilation; callers (``repro.plan``) wrap the
+    runner in a single pinned ``jax.jit``.
     """
-    if method not in _METHODS:
-        raise ValueError(f"method must be one of {method_names()}, got {method}")
-    cfg = _METHODS[method]
+    cfg = get_method(method)
     Pn = As.n_shards
     R = As.rows_max
     hw = As.bandwidth
@@ -228,10 +248,10 @@ def pipecg_distributed(
     @partial(
         shard_map,
         mesh=mesh,
-        in_specs=(spec_mat, spec_scalar, spec_vec, spec_vec),
+        in_specs=(spec_mat, spec_scalar, spec_vec, spec_vec, P(), P()),
         out_specs=(P(axis, None), P(), P(), P(), P()),
     )
-    def _solve(data_blk, rows_blk, b_blk, inv_blk):
+    def _solve(data_blk, rows_blk, b_blk, inv_blk, atol, rtol):
         data = data_blk[0]  # (k, R)
         rows = rows_blk[0]
         b = b_blk[0]  # (R,)
@@ -245,13 +265,53 @@ def pipecg_distributed(
             core=core,
             reducer=reducer,
             inv_diag=inv_diag,  # PC fused into the canonical core
-            atol=jnp.float32(atol),
-            rtol=jnp.float32(rtol),
+            atol=atol,
+            rtol=rtol,
             maxiter=maxiter,
         )
         return x[None], i, norm, converged, hist
 
-    x, iters, norm, conv, hist = _solve(As.data, As.rows_valid, b_sh, inv_diag_sh)
-    return SolveResult(
-        x=x.reshape(Pn, R), iterations=iters, residual_norm=norm, converged=conv, history=hist
+    def runner(b_sh, inv_diag_sh, atol=1e-5, rtol=0.0) -> SolveResult:
+        x, iters, norm, conv, hist = _solve(
+            As.data, As.rows_valid, b_sh, inv_diag_sh,
+            jnp.float32(atol), jnp.float32(rtol),
+        )
+        return SolveResult(
+            x=x.reshape(Pn, R), iterations=iters, residual_norm=norm,
+            converged=conv, history=hist,
+        )
+
+    return runner
+
+
+def pipecg_distributed(
+    As: ShardedDIA,
+    b_sh: jax.Array,
+    inv_diag_sh: jax.Array,
+    *,
+    mesh: Mesh,
+    axis: str = "rows",
+    method: str = "h3",
+    engine: str = "jnp",
+    atol: float = 1e-5,
+    rtol: float = 0.0,
+    maxiter: int = 10000,
+) -> SolveResult:
+    """One-shot distributed PIPECG on row-sharded banded A.
+
+    Builds the shard_map program and runs it once — the convenience form of
+    :func:`build_distributed_solver` (which amortizes the build across many
+    right-hand sides; ``repro.plan`` goes through that path).
+
+    As          — ShardedDIA from repro.sparse.shard_dia (h3 may use
+                  performance-model/unequal partitions; h1/h2 require equal).
+    b_sh        — (P, R) sharded rhs from shard_vector.
+    inv_diag_sh — (P, R) sharded Jacobi inverse diagonal (use ones for no PC).
+    engine      — iteration-core engine for the local block ("jnp"/"pallas"/
+                  "auto"), same registry as the single-device solver.
+    Returns SolveResult with x of shape (P*R,) padded; use unshard_vector.
+    """
+    runner = build_distributed_solver(
+        As, mesh=mesh, axis=axis, method=method, engine=engine, maxiter=maxiter
     )
+    return runner(b_sh, inv_diag_sh, atol, rtol)

@@ -90,8 +90,16 @@ def vma_core_pallas(z, q, s, p, x, r, u, w, n, m, inv_diag, alpha, beta):
 _CORES = {"jnp": pipecg_vma_core, "pallas": vma_core_pallas}
 
 
-def register_core(name: str, core: Callable) -> None:
-    """Register an alternative iteration-core engine (plug-in point)."""
+def register_core(name: str, core: Callable, *, overwrite: bool = False) -> None:
+    """Register an alternative iteration-core engine (plug-in point).
+
+    Raises ValueError if ``name`` is already registered, unless
+    ``overwrite=True`` — silent replacement hides plug-in clashes.
+    """
+    if name in _CORES and not overwrite:
+        raise ValueError(
+            f"iteration core {name!r} already registered; pass overwrite=True to replace it"
+        )
     _CORES[name] = core
 
 

@@ -63,8 +63,19 @@ _REDUCERS: Dict[str, Callable[[Optional[str]], Reducer]] = {
 }
 
 
-def register_reducer(name: str, factory: Callable[[Optional[str]], Reducer]) -> None:
-    """Register a reduction strategy: ``factory(axis_name) -> Reducer``."""
+def register_reducer(
+    name: str, factory: Callable[[Optional[str]], Reducer], *, overwrite: bool = False
+) -> None:
+    """Register a reduction strategy: ``factory(axis_name) -> Reducer``.
+
+    Raises ValueError if ``name`` is already registered, unless
+    ``overwrite=True`` — silent replacement hides plug-in clashes.
+    """
+    if name in _REDUCERS and not overwrite:
+        raise ValueError(
+            f"reduction strategy {name!r} already registered; pass "
+            f"overwrite=True to replace it"
+        )
     _REDUCERS[name] = factory
 
 

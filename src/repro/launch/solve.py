@@ -1,8 +1,11 @@
 """Solver launcher: ``python -m repro.launch.solve --matrix poisson125:16``
 
-Thin CLI over the ``repro.solve`` registry. Single-device or distributed
-(--shards N, needs that many devices — on CPU set
+Thin CLI over the plan/execute API: builds one ``repro.plan`` (setup paid
+once, printed via ``plan.describe()``), then solves. Single-device or
+distributed (--shards N, needs that many devices — on CPU set
 XLA_FLAGS=--xla_force_host_platform_device_count=N before launch).
+``--rhs K`` serves K right-hand sides through the same plan
+(``plan.solve_batched``) to demonstrate the amortization.
 """
 from __future__ import annotations
 
@@ -10,7 +13,7 @@ import argparse
 
 import jax.numpy as jnp
 
-from .. import solve, solver_names
+from .. import plan, solver_names
 from ..sparse import poisson7, poisson27, poisson125, spmv, synthetic_spd_dia, table1_matrix
 
 GENS = {"poisson7": poisson7, "poisson27": poisson27, "poisson125": poisson125}
@@ -39,6 +42,8 @@ def main(argv=None):
     ap.add_argument("--maxiter", type=int, default=10000)
     ap.add_argument("--replace-every", type=int, default=0)
     ap.add_argument("--weighted", action="store_true", help="nnz perf-model partition (h3)")
+    ap.add_argument("--rhs", type=int, default=1,
+                    help="number of right-hand sides served through the one plan")
     args = ap.parse_args(argv)
 
     A = build_matrix(args.matrix)
@@ -62,10 +67,23 @@ def main(argv=None):
             ap.error(f"--method {method} is distributed; set --shards > 1")
         if method == "pipecg":
             kw = {"replace_every": args.replace_every}
-    res = solve(
-        A, b, method=method, engine=args.engine, M="jacobi",
-        atol=args.atol, maxiter=args.maxiter, **kw,
-    )
+
+    # --- the plan/execute split: setup once... ---
+    p = plan(A, method=method, engine=args.engine, M="jacobi",
+             atol=args.atol, maxiter=args.maxiter, **kw)
+    desc = p.describe()
+    print("plan:", ", ".join(f"{k}={desc[k]}" for k in sorted(desc) if k != "trace_count"))
+
+    # --- ...then any amount of rhs traffic ---
+    res = p.solve(b)
+    if args.rhs > 1:
+        B = jnp.stack([(k + 1.0) * b for k in range(args.rhs)])
+        batch = p.solve_batched(B)
+        print(
+            f"served {args.rhs} rhs through one plan: "
+            f"iters={[int(i) for i in jnp.atleast_1d(batch.iterations)]} "
+            f"traces={p.trace_count}"
+        )
 
     err = float(jnp.linalg.norm(res.x - xstar))
     true_res = float(jnp.linalg.norm(b - spmv(A, res.x)))

@@ -1,0 +1,452 @@
+"""Plan/execute solver API: ``repro.plan(A, ...) -> SolverPlan``.
+
+PIPECG's economics are pay-setup-once, iterate-many: preconditioner
+construction, the performance-model row decomposition, operator sharding
+and tracing/compiling the iteration loop are all amortizable across every
+right-hand side served against the same operator. This module is the
+setup phase — the PETSc ``KSPSetUp`` / scipy ``factorized`` shape:
+
+    p = repro.plan(A, method="h3", shards=8, M="jacobi")   # pay once
+    res  = p.solve(b)                # reuses the pinned compiled loop
+    many = p.solve_batched(B)        # (k, n) rhs -> ONE vmapped program
+    p.describe()                     # method/engine/shard-bounds/reducer
+
+What a plan pins at construction:
+
+* the resolved preconditioner (``jacobi(A)`` is computed exactly once);
+* for distributed methods — the perf-model ``decompose`` row boundaries,
+  the device mesh, the ``ShardedDIA`` operator handle and the sharded
+  inverse diagonal (nothing is re-sharded per solve);
+* one jitted solve program per entry point (``solve`` / ``solve_batched``)
+  with ``atol``/``rtol``/``x0`` as *traced* arguments, so changing the
+  tolerance or warm-start between calls re-traces nothing.
+
+``A`` may be any ``LinearOperator`` (``sparse.operators``): the
+materialized ``DIAMatrix``/``BellMatrix``/``CSRMatrix`` formats, a dense
+array, or a matrix-free :class:`~repro.sparse.FunctionOperator` (stencils
+applied on the fly, Jacobian-vector products). Distributed methods still
+require a ``DIAMatrix`` — their halo exchange derives from band offsets.
+
+``repro.solve`` remains the one-shot form: a thin wrapper that fetches a
+plan from a keyed cache (operator identity x configuration) and calls
+``plan.solve`` — serving loops get plan reuse without holding a handle.
+The single-device method registry (``register_solver``) lives here;
+registered solver fns must be jit-traceable, since plans pin them inside
+one compiled program.
+"""
+from __future__ import annotations
+
+import inspect
+import sys as _sys
+from collections import OrderedDict
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .core import chronopoulos_cg, identity, jacobi, pcg, pipecg
+from .core.distributed import (
+    build_distributed_solver,
+    get_method,
+    make_solver_mesh,
+    method_names,
+)
+from .core.perfmodel import decompose
+from .core.preconditioners import IdentityPC, JacobiPC
+from .core.types import SolveResult
+from .sparse import balanced_rows, shard_dia, shard_vector, spmv, unshard_vector
+from .sparse.formats import DIAMatrix
+
+__all__ = [
+    "plan",
+    "SolverPlan",
+    "register_solver",
+    "solver_names",
+    "get_plan",
+    "plan_cache_stats",
+    "clear_plan_cache",
+]
+
+
+def _resolve_pc(M, A):
+    if M is None or M == "identity" or M == "none":
+        return identity()
+    if M == "jacobi":
+        return jacobi(A)  # needs A.diagonal(); matrix-free operators must pass diag=
+    if isinstance(M, str):
+        raise ValueError(f"unknown preconditioner name {M!r} (use 'jacobi'/'identity')")
+    return M
+
+
+def _require_jnp_engine(method: str, engine: str) -> None:
+    # honest failure instead of silently running jnp under a "pallas" label
+    if engine not in ("auto", "jnp"):
+        raise ValueError(
+            f"method {method!r} has no {engine!r} backend (the Pallas engines "
+            "apply to pipecg and the distributed methods); use engine='jnp'/'auto'"
+        )
+
+
+def _solve_pcg(A, b, *, M, x0, atol, rtol, maxiter, engine):
+    _require_jnp_engine("pcg", engine)
+    return pcg(A, b, M=M, x0=x0, atol=atol, rtol=rtol, maxiter=maxiter)
+
+
+def _solve_chronopoulos(A, b, *, M, x0, atol, rtol, maxiter, engine):
+    _require_jnp_engine("chronopoulos", engine)
+    return chronopoulos_cg(A, b, M=M, x0=x0, atol=atol, rtol=rtol, maxiter=maxiter)
+
+
+def _solve_pipecg(A, b, *, M, x0, atol, rtol, maxiter, engine,
+                  replace_every=0, spmv_engine=None):
+    return pipecg(
+        A, b, M=M, x0=x0, atol=atol, rtol=rtol, maxiter=maxiter,
+        engine=engine, spmv_engine=spmv_engine, replace_every=replace_every,
+    )
+
+
+SolverFn = Callable[..., SolveResult]
+
+_SOLVERS: Dict[str, SolverFn] = {
+    "pcg": _solve_pcg,
+    "chronopoulos": _solve_chronopoulos,
+    "pipecg": _solve_pipecg,
+}
+
+
+def register_solver(name: str, fn: SolverFn, *, overwrite: bool = False) -> None:
+    """Register a solve method: ``fn(A, b, *, M, x0, ...) -> SolveResult``.
+
+    ``fn`` must be jit-traceable — plans pin it inside one compiled
+    program. Raises ValueError if ``name`` is already registered, unless
+    ``overwrite=True`` — silent replacement hides plug-in clashes.
+    """
+    if name in _SOLVERS and not overwrite:
+        raise ValueError(
+            f"solver {name!r} already registered; pass overwrite=True to replace it"
+        )
+    _SOLVERS[name] = fn
+
+
+def solver_names() -> Tuple[str, ...]:
+    """All method names, each exactly once, sorted."""
+    return tuple(sorted(set(_SOLVERS) | set(method_names()) | {"pipecg_distributed"}))
+
+
+class SolverPlan:
+    """A pinned, reusable solver: setup done, only iteration remains.
+
+    Build via :func:`repro.plan`. Thread-compatible for reads; build one
+    plan per operator/configuration and fire right-hand sides at it.
+    ``trace_count`` exposes how many times a solve program was traced —
+    steady-state serving sits at 1 per entry point (the reuse guarantee
+    the tests assert).
+    """
+
+    def __init__(self, A, *, method="pipecg", engine="auto", M="jacobi",
+                 atol=1e-5, rtol=0.0, maxiter=10000, **kwargs):
+        if method in method_names():  # "h1"/"h2"/"h3" aliases
+            kwargs.setdefault("dist_method", method)
+            method = "pipecg_distributed"
+        distributed = method == "pipecg_distributed"
+        if not distributed and method not in _SOLVERS:
+            raise ValueError(f"unknown method {method!r}; have {solver_names()}")
+
+        self.A = A
+        self.method = method
+        self.engine = engine
+        self.M = _resolve_pc(M, A)
+        self.atol = float(atol)
+        self.rtol = float(rtol)
+        self.maxiter = int(maxiter)
+        self.n = int(A.shape[0]) if hasattr(A, "shape") else None
+        self.distributed = distributed
+        self._traces = 0
+        self._run = None
+        self._run_batched = None
+        self._run_x0 = None
+
+        if distributed:
+            self._setup_distributed(kwargs)
+        else:
+            self._setup_single(kwargs)
+
+    # -- setup ------------------------------------------------------------
+
+    def _setup_single(self, kwargs):
+        fn = _SOLVERS[self.method]
+        params = inspect.signature(fn).parameters
+        if not any(p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()):
+            unknown = set(kwargs) - set(params)
+            if unknown:
+                raise TypeError(
+                    f"method {self.method!r} does not accept {sorted(unknown)}; "
+                    f"it takes {sorted(k for k in params if k not in ('A', 'b'))}"
+                )
+        self.kwargs = dict(kwargs)
+        A, M, engine, maxiter = self.A, self.M, self.engine, self.maxiter
+
+        def _inner(b, x0, atol, rtol):
+            self._traces += 1  # runs at trace time only
+            return fn(A, b, M=M, x0=x0, atol=atol, rtol=rtol,
+                      maxiter=maxiter, engine=engine, **kwargs)
+
+        self._inner = _inner
+        self._run = jax.jit(_inner)
+
+    def _setup_distributed(self, kwargs):
+        dist_method = kwargs.pop("dist_method", "h3")
+        shards = kwargs.pop("shards", 1)
+        weights = kwargs.pop("weights", None)
+        partition = kwargs.pop("partition", "rows")
+        mesh = kwargs.pop("mesh", None)
+        if kwargs:
+            raise TypeError(
+                f"distributed plan does not accept {sorted(kwargs)}; it takes "
+                f"['dist_method', 'mesh', 'partition', 'shards', 'weights']"
+            )
+        A = self.A
+        if not isinstance(A, DIAMatrix):
+            raise TypeError(f"distributed solve needs a DIAMatrix, got {type(A).__name__}")
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        if len(jax.devices()) < shards:
+            raise RuntimeError(
+                f"need {shards} devices but only {len(jax.devices())} visible; on CPU set "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={shards} before importing jax"
+            )
+        if partition not in ("rows", "nnz"):
+            raise ValueError(f"unknown partition {partition!r} (use 'rows' or 'nnz')")
+        if isinstance(self.M, JacobiPC):
+            inv_diag = self.M.inv_diag
+        elif isinstance(self.M, IdentityPC):
+            inv_diag = jnp.ones((A.n,), A.dtype)
+        else:
+            raise TypeError(
+                f"distributed solve supports Jacobi/identity PCs, got {type(self.M).__name__}"
+            )
+        # ---- the paid-once setup: decomposition, mesh, operator handle ----
+        if weights is not None or partition == "nnz":
+            bounds = decompose(A, shards, weights=None if weights is None else np.asarray(weights))
+        else:
+            bounds = balanced_rows(A.n, shards)
+        self.dist_method = dist_method
+        self.shards = int(shards)
+        self.bounds = tuple(int(x) for x in np.asarray(bounds))
+        self.mesh = mesh if mesh is not None else make_solver_mesh(shards)
+        self.sharded = shard_dia(A, bounds)  # the reusable operator handle
+        self.kwargs = {"dist_method": dist_method, "shards": self.shards,
+                       "partition": partition}
+        runner = build_distributed_solver(
+            self.sharded, mesh=self.mesh, method=dist_method,
+            engine=self.engine, maxiter=self.maxiter,
+        )
+        inv_sh = shard_vector(inv_diag, bounds)
+        bounds_arr = self.bounds
+
+        def _solve_rhs(rhs, atol, rtol) -> SolveResult:
+            res = runner(shard_vector(rhs, bounds_arr), inv_sh, atol, rtol)
+            return SolveResult(
+                x=unshard_vector(res.x, bounds_arr), iterations=res.iterations,
+                residual_norm=res.residual_norm, converged=res.converged,
+                history=res.history,
+            )
+
+        def _inner0(b, atol, rtol):
+            self._traces += 1
+            return _solve_rhs(b, atol, rtol)
+
+        def _inner_x0(b, x0, atol, rtol):
+            # nonzero warm start: solve the shifted system A d = b - A x0,
+            # then x = x0 + d (no host sync, no x0==0 guard needed)
+            self._traces += 1
+            res = _solve_rhs(b - spmv(A, x0), atol, rtol)
+            return SolveResult(
+                x=x0 + res.x, iterations=res.iterations,
+                residual_norm=res.residual_norm, converged=res.converged,
+                history=res.history,
+            )
+
+        self._run = jax.jit(_inner0)
+        self._run_x0 = jax.jit(_inner_x0)
+
+    # -- execution --------------------------------------------------------
+
+    @property
+    def trace_count(self) -> int:
+        """Times any of this plan's solve programs has been (re)traced."""
+        return self._traces
+
+    def _tols(self, atol, rtol):
+        return (
+            jnp.float32(self.atol if atol is None else atol),
+            jnp.float32(self.rtol if rtol is None else rtol),
+        )
+
+    def solve(self, b, x0=None, atol: float | None = None, rtol: float | None = None) -> SolveResult:
+        """Solve ``A x = b`` with this plan's pinned program.
+
+        ``x0``/``atol``/``rtol`` are per-call and traced — varying them
+        between calls does not retrace (``x0=None`` and ``x0=array`` are
+        two distinct programs; steady state is still one trace each).
+        """
+        atol, rtol = self._tols(atol, rtol)
+        if self.distributed:
+            if x0 is None:
+                return self._run(b, atol, rtol)
+            return self._run_x0(b, x0, atol, rtol)
+        if x0 is None:
+            x0 = jnp.zeros_like(b)
+        return self._run(b, x0, atol, rtol)
+
+    def solve_batched(self, B, x0=None, atol: float | None = None, rtol: float | None = None) -> SolveResult:
+        """Solve a batch of rhs, shape (k, n) -> SolveResult with leading k.
+
+        Single-device methods run as ONE vmapped XLA program (per-lane
+        results are exact; wall-clock is set by the slowest rhs).
+        Distributed methods run sequentially per rhs — shard_map does not
+        nest under vmap — but still reuse this plan's pinned program and
+        operator handle.
+        """
+        if self.distributed:
+            xs = [None] * B.shape[0] if x0 is None else list(x0)
+            results = [self.solve(b, x0=x, atol=atol, rtol=rtol) for b, x in zip(B, xs)]
+            return jax.tree_util.tree_map(lambda *leaves: jnp.stack(leaves), *results)
+        if self._run_batched is None:
+            self._run_batched = jax.jit(jax.vmap(self._inner, in_axes=(0, 0, None, None)))
+        atol, rtol = self._tols(atol, rtol)
+        if x0 is None:
+            x0 = jnp.zeros_like(B)
+        return self._run_batched(B, x0, atol, rtol)
+
+    def describe(self) -> dict:
+        """Introspection: what this plan pinned at setup."""
+        d = {
+            "method": self.kwargs.get("dist_method", self.method) if self.distributed else self.method,
+            "engine": self.engine,
+            "n": self.n,
+            "dtype": str(getattr(self.A, "dtype", "?")),
+            "operator": type(self.A).__name__,
+            "preconditioner": type(self.M).__name__,
+            "atol": self.atol,
+            "rtol": self.rtol,
+            "maxiter": self.maxiter,
+            "distributed": self.distributed,
+            "trace_count": self._traces,
+        }
+        if self.distributed:
+            cfg = get_method(self.dist_method)
+            d.update(
+                shards=self.shards,
+                shard_bounds=self.bounds,
+                rows_per_shard=tuple(int(x) for x in np.diff(self.bounds)),
+                reducer=cfg.reduce,
+                spmv_strategy=cfg.spmv,
+                mesh_axes=tuple(self.mesh.axis_names),
+            )
+        else:
+            d.update({k: v for k, v in self.kwargs.items() if v is not None})
+        return d
+
+    def __repr__(self) -> str:
+        cfg = ", ".join(f"{k}={v!r}" for k, v in self.describe().items())
+        return f"SolverPlan({cfg})"
+
+
+def plan(A, method: str = "pipecg", engine: str = "auto", M="jacobi",
+         *, atol: float = 1e-5, rtol: float = 0.0, maxiter: int = 10000,
+         **kwargs) -> SolverPlan:
+    """Build a reusable :class:`SolverPlan` for ``A`` (see module docstring).
+
+    Keyword arguments mirror ``repro.solve``: ``replace_every``/
+    ``spmv_engine`` (pipecg), ``shards``/``weights``/``partition``/``mesh``
+    (distributed methods). ``atol``/``rtol`` set the plan's *defaults* —
+    ``plan.solve(b, atol=...)`` overrides per call without retracing.
+    """
+    return SolverPlan(A, method=method, engine=engine, M=M,
+                      atol=atol, rtol=rtol, maxiter=maxiter, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# the keyed plan cache behind one-shot ``repro.solve``
+# ---------------------------------------------------------------------------
+
+_PLAN_CACHE: "OrderedDict[tuple, SolverPlan]" = OrderedDict()
+_PLAN_CACHE_MAX = 16
+_CACHE_STATS = {"hits": 0, "misses": 0, "uncachable": 0}
+
+
+def _freeze(v):
+    if v is None or isinstance(v, (bool, int, float, str, bytes)):
+        return v
+    if isinstance(v, (list, tuple)):
+        return tuple(_freeze(x) for x in v)
+    if hasattr(v, "ravel"):  # numpy / jax arrays (e.g. weights)
+        return ("arr",) + tuple(np.asarray(v).ravel().tolist())
+    return ("id", id(v))  # identity-keyed; the plan keeps the object alive
+
+
+def _plan_key(A, method, engine, M, maxiter, kwargs):
+    Mk = M if (M is None or isinstance(M, str)) else ("id", id(M))
+    items = tuple((k, _freeze(kwargs[k])) for k in sorted(kwargs))
+    key = (id(A), method, engine, Mk, int(maxiter), items)
+    try:
+        hash(key)
+    except TypeError:
+        return None
+    return key
+
+
+def get_plan(A, *, method="pipecg", engine="auto", M="jacobi",
+             maxiter: int = 10000, **kwargs) -> SolverPlan:
+    """Fetch-or-build a cached plan keyed on operator identity x config.
+
+    Identity keys (``id(A)``, ``id(M)``, ...) are safe because the cached
+    plan holds strong references to those exact objects — an id cannot be
+    reused while its entry lives. A hit is verified with ``is`` against
+    the live operator; eviction is LRU at {max} entries.
+    """
+    key = _plan_key(A, method, engine, M, maxiter, kwargs)
+    if key is not None:
+        cached = _PLAN_CACHE.get(key)
+        if cached is not None and cached.A is A:
+            _PLAN_CACHE.move_to_end(key)
+            _CACHE_STATS["hits"] += 1
+            return cached
+        _CACHE_STATS["misses"] += 1
+    else:
+        _CACHE_STATS["uncachable"] += 1
+    p = plan(A, method=method, engine=engine, M=M, maxiter=maxiter, **kwargs)
+    if key is not None:
+        _PLAN_CACHE[key] = p
+        while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
+            _PLAN_CACHE.popitem(last=False)
+    return p
+
+
+if get_plan.__doc__:
+    get_plan.__doc__ = get_plan.__doc__.replace("{max}", str(_PLAN_CACHE_MAX))
+
+
+def plan_cache_stats() -> dict:
+    """Hit/miss/uncachable counters + current size of the plan cache."""
+    return dict(_CACHE_STATS, size=len(_PLAN_CACHE))
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()
+    for k in _CACHE_STATS:
+        _CACHE_STATS[k] = 0
+
+
+# ``repro.plan`` names both this module and the entry-point function; any
+# ``import repro.plan`` sets the package attribute to the module, which
+# would otherwise shadow the callable. Making the module itself callable
+# (delegating to :func:`plan`) keeps ``repro.plan(A, ...)`` working under
+# every import order while ``repro.plan.SolverPlan`` etc. stay reachable.
+class _CallableModule(_sys.modules[__name__].__class__):
+    __call__ = staticmethod(plan)
+
+
+_sys.modules[__name__].__class__ = _CallableModule

@@ -5,10 +5,13 @@ loop is a single jitted ``lax.while_loop`` (token-at-a-time with the
 family's cache/state), so serving lowers to one XLA program — the form
 the dry-run compiles for decode_32k / long_500k.
 
-Solver serving: ``SolverEngine`` pins one operator + method/engine choice
-from the ``repro.solve`` registry and serves many right-hand sides —
-single solves reuse the jit cache (same A pytree structure), batches are
-vmapped into one XLA program.
+Solver serving: ``SolverEngine`` wraps one ``repro.plan`` — operator,
+preconditioner, decomposition, sharding and the compiled loop are pinned
+at construction — and serves many right-hand sides: single solves hit the
+plan's pinned program, batches are vmapped into one XLA program, and
+``max_batch`` coalesces arbitrary request batches into fixed-size padded
+buckets so steady-state traffic compiles exactly two programs (single +
+bucket) no matter the arrival pattern.
 """
 from __future__ import annotations
 
@@ -113,20 +116,24 @@ def _copy_prefill(api: ModelApi, cache, pf_cache, T: int, batch: dict):
 # ---------------------------------------------------------------------------
 
 class SolverEngine:
-    """Serve many right-hand sides against one pinned operator.
+    """Serve many right-hand sides against one pinned ``SolverPlan``.
 
-    The operator, preconditioner, method and engine are fixed at
-    construction (amortizing jit compilation across requests);
-    ``solve``/``solve_batch`` then accept arbitrary rhs traffic:
+    Construction builds the plan — preconditioner resolution, perf-model
+    decomposition, operator sharding and the compiled loop all happen
+    exactly once; ``solve``/``solve_batch`` then accept arbitrary rhs
+    traffic:
 
         eng = SolverEngine(A, method="pipecg", engine="pallas", atol=1e-6)
-        res  = eng.solve(b)            # one rhs
+        res  = eng.solve(b)            # one rhs, pinned program
         many = eng.solve_batch(B)      # (k, n): ONE vmapped XLA program
 
-    Distributed methods (h1/h2/h3) are served too, but each request runs
-    sequentially (shard_map does not nest under vmap) and currently
-    re-shards the operator per call — an operator-handle cache is a
-    ROADMAP item; size latency-sensitive deployments accordingly.
+    ``max_batch`` turns on request coalescing: incoming batches are split
+    into buckets of exactly ``max_batch`` rhs (the final partial bucket is
+    zero-padded to size), so any traffic pattern executes the same two
+    compiled programs — the paper's setup-once economics applied to the
+    serving tier. Distributed methods (h1/h2/h3) are served through the
+    same plan (operator sharded once, at construction); each request runs
+    sequentially since shard_map does not nest under vmap.
     """
 
     def __init__(
@@ -138,41 +145,49 @@ class SolverEngine:
         atol: float = 1e-5,
         rtol: float = 0.0,
         maxiter: int = 10000,
+        max_batch: Optional[int] = None,
         **method_kwargs,
     ):
-        from ..api import solve  # lazy: keep serve importable without solver deps
-        from ..core.distributed import method_names
+        from ..plan import plan  # lazy: keep serve importable without solver deps
 
-        self._solve = solve
-        self.A = A
-        self.M = M
-        self.method = method
-        self.engine = engine
-        self.atol = atol
-        self.rtol = rtol
-        self.maxiter = maxiter
-        self.method_kwargs = method_kwargs
-        self._distributed = method in method_names() or method == "pipecg_distributed"
-        self._vmapped = None
+        if max_batch is not None and max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.plan = plan(
+            A, method=method, engine=engine, M=M,
+            atol=atol, rtol=rtol, maxiter=maxiter, **method_kwargs,
+        )
+        self.max_batch = max_batch
+
+    @property
+    def A(self):
+        return self.plan.A
+
+    def describe(self) -> dict:
+        d = self.plan.describe()
+        d["max_batch"] = self.max_batch
+        return d
 
     def solve(self, b: jax.Array):
         """Solve for a single rhs ``b`` of shape (n,)."""
-        return self._solve(
-            self.A, b, method=self.method, engine=self.engine, M=self.M,
-            atol=self.atol, rtol=self.rtol, maxiter=self.maxiter, **self.method_kwargs,
-        )
+        return self.plan.solve(b)
 
     def solve_batch(self, bs: jax.Array):
         """Solve a batch of rhs, shape (k, n) -> SolveResult with leading k.
 
         Per-lane results are exact (vmap's while_loop rule freezes a lane's
         state once its own convergence test fires, so iterations/history are
-        per-rhs), but wall-clock is set by the slowest rhs in the batch —
+        per-rhs), but wall-clock is set by the slowest rhs in the bucket —
         group rhs of similar difficulty when latency matters.
         """
-        if self._distributed:
-            results = [self.solve(b) for b in bs]
-            return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *results)
-        if self._vmapped is None:
-            self._vmapped = jax.vmap(self.solve)
-        return self._vmapped(bs)
+        if self.max_batch is None or self.plan.distributed or bs.shape[0] == 0:
+            return self.plan.solve_batched(bs)
+        k = bs.shape[0]
+        chunks = []
+        for lo in range(0, k, self.max_batch):
+            chunk = bs[lo : lo + self.max_batch]
+            pad = self.max_batch - chunk.shape[0]
+            if pad:  # coalesce the remainder into the SAME compiled bucket
+                chunk = jnp.concatenate([chunk, jnp.zeros((pad, bs.shape[1]), bs.dtype)])
+            chunks.append(self.plan.solve_batched(chunk))
+        out = jax.tree_util.tree_map(lambda *xs: jnp.concatenate(xs), *chunks)
+        return jax.tree_util.tree_map(lambda x: x[:k], out)

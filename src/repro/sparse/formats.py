@@ -10,11 +10,16 @@ TPU-friendly formats:
 * ``BellMatrix`` — Block-ELLPACK: every row padded to a fixed number of
   slots ``R`` (column index + value). General sparsity with a regular,
   vectorizable layout (the TPU answer to CSR's ragged rows).
+* ``CSRMatrix`` — device CSR in expanded (COO-row) form: per-entry row ids
+  so SPMV is a gather + segment-sum with no ragged indexing. The general
+  fallback format when a matrix has no band/slot structure to exploit.
 * ``CSRHost`` — host-side (numpy) CSR used only for construction,
   partitioning and conversion; never traced.
 
 All device containers are registered dataclass pytrees: array leaves are
-data, shapes/offsets are static metadata.
+data, shapes/offsets are static metadata. Each carries a ``matvec``
+adapter (routed through the ``sparse.spmv`` engine registry) so it
+satisfies the ``LinearOperator`` protocol the solvers are written against.
 """
 from __future__ import annotations
 
@@ -30,10 +35,12 @@ import numpy as np
 __all__ = [
     "DIAMatrix",
     "BellMatrix",
+    "CSRMatrix",
     "CSRHost",
     "dia_from_csr",
     "bell_from_csr",
     "csr_from_dia",
+    "csr_device_from_host",
 ]
 
 
@@ -81,6 +88,11 @@ class DIAMatrix:
     def with_dtype(self, dtype) -> "DIAMatrix":
         return DIAMatrix(self.data.astype(dtype), self.offsets, self.n)
 
+    def matvec(self, x: jax.Array) -> jax.Array:
+        from .spmv import spmv  # lazy: formats is imported by spmv
+
+        return spmv(self, x)
+
 
 @partial(jax.tree_util.register_dataclass, data_fields=["cols", "vals"], meta_fields=["n"])
 @dataclass(frozen=True)
@@ -116,6 +128,68 @@ class BellMatrix:
 
     def with_dtype(self, dtype) -> "BellMatrix":
         return BellMatrix(self.cols, self.vals.astype(dtype), self.n)
+
+    def matvec(self, x: jax.Array) -> jax.Array:
+        from .spmv import spmv
+
+        return spmv(self, x)
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["rows", "cols", "vals"],
+    meta_fields=["n"],
+)
+@dataclass(frozen=True)
+class CSRMatrix:
+    """Device CSR in expanded (COO-row) form.
+
+    ``rows``/``cols``/``vals`` are parallel (nnz,) arrays sorted by row —
+    the layout segment-sum SPMV wants (``indices_are_sorted=True``), with
+    no ragged ``indptr`` indexing on device. Build via
+    :func:`csr_device_from_host`.
+    """
+
+    rows: jax.Array  # (nnz,) int32, sorted ascending
+    cols: jax.Array  # (nnz,) int32
+    vals: jax.Array  # (nnz,)
+    n: int
+
+    @property
+    def dtype(self):
+        return self.vals.dtype
+
+    @property
+    def shape(self):
+        return (self.n, self.n)
+
+    def nnz(self) -> int:
+        return int(self.vals.shape[0])
+
+    def diagonal(self) -> jax.Array:
+        on_diag = self.rows == self.cols
+        return jnp.zeros((self.n,), self.vals.dtype).at[self.rows].add(
+            jnp.where(on_diag, self.vals, 0)
+        )
+
+    def with_dtype(self, dtype) -> "CSRMatrix":
+        return CSRMatrix(self.rows, self.cols, self.vals.astype(dtype), self.n)
+
+    def matvec(self, x: jax.Array) -> jax.Array:
+        from .spmv import spmv
+
+        return spmv(self, x)
+
+
+def csr_device_from_host(csr: "CSRHost") -> CSRMatrix:
+    """Expand host CSR (indptr) into the device COO-row layout."""
+    rows = np.repeat(np.arange(csr.n, dtype=np.int32), csr.row_nnz())
+    return CSRMatrix(
+        rows=jnp.asarray(rows),
+        cols=jnp.asarray(csr.indices, dtype=jnp.int32),
+        vals=jnp.asarray(csr.data),
+        n=csr.n,
+    )
 
 
 @dataclass(frozen=True)

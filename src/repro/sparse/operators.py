@@ -1,0 +1,104 @@
+"""Linear operators — what the solvers actually require of ``A``.
+
+The CG family never inspects matrix entries; it only ever applies ``A`` to
+a vector. That contract is the :class:`LinearOperator` protocol
+(``shape`` / ``dtype`` / ``matvec``), and every non-distributed solver
+method accepts anything satisfying it:
+
+* the materialized formats — ``DIAMatrix`` / ``BellMatrix`` / ``CSRMatrix``
+  (and dense ``jax.Array``) all carry ``matvec`` adapters routed through
+  the ``sparse.spmv`` engine registry;
+* :class:`FunctionOperator` — a matrix-free operator wrapping an arbitrary
+  traceable callable: stencils applied on the fly, Jacobian-vector
+  products (``jax.jvp``), composed/shifted operators. Pass ``diag`` when
+  the Jacobi preconditioner should be available (a matrix-free operator
+  cannot derive its own diagonal).
+
+``as_operator`` adapts plain callables and arrays to the protocol; the
+distributed methods still need banded structure (a ``DIAMatrix``) because
+their halo exchange is derived from the band offsets.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["LinearOperator", "FunctionOperator", "as_operator"]
+
+
+@runtime_checkable
+class LinearOperator(Protocol):
+    """Structural contract every solver method accepts for ``A``."""
+
+    @property
+    def shape(self) -> Tuple[int, int]: ...
+
+    @property
+    def dtype(self) -> Any: ...
+
+    def matvec(self, x: jax.Array) -> jax.Array: ...
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["diag"],
+    meta_fields=["fn", "n", "out_dtype"],
+)
+@dataclass(frozen=True)
+class FunctionOperator:
+    """Matrix-free SPD operator: ``y = fn(x)`` with no materialized matrix.
+
+    ``fn`` must be a jit-traceable ``(n,) -> (n,)`` map that is linear and
+    symmetric positive definite (the solvers assume, not check, this).
+    ``diag`` is the operator diagonal, required only when a Jacobi
+    preconditioner is requested. Registered as a pytree: ``fn``/``n``/
+    ``out_dtype`` are static metadata (a new ``fn`` object means a new jit
+    trace — build the operator once and reuse it, e.g. via ``repro.plan``).
+    """
+
+    fn: Callable[[jax.Array], jax.Array]
+    n: int
+    out_dtype: Any = jnp.float32
+    diag: Optional[jax.Array] = None
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.n, self.n)
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.out_dtype)
+
+    def matvec(self, x: jax.Array) -> jax.Array:
+        return self.fn(x)
+
+    def diagonal(self) -> jax.Array:
+        if self.diag is None:
+            raise ValueError(
+                "matrix-free FunctionOperator has no diagonal; pass diag= at "
+                "construction, or solve with M='identity' / an explicit "
+                "preconditioner object"
+            )
+        return self.diag
+
+
+def as_operator(A, n: int | None = None, dtype=None, diag=None):
+    """Adapt ``A`` to the :class:`LinearOperator` protocol.
+
+    Matrix containers and dense arrays pass through unchanged (the spmv
+    registry already dispatches on them); a bare callable is wrapped into a
+    :class:`FunctionOperator` (``n`` is then required).
+    """
+    if hasattr(A, "matvec") and hasattr(A, "shape"):
+        return A
+    if isinstance(A, jax.Array) or hasattr(A, "ndim"):
+        return A
+    if callable(A):
+        if n is None:
+            raise ValueError("as_operator(callable) needs n= (operator size)")
+        return FunctionOperator(fn=A, n=n, out_dtype=dtype or jnp.float32, diag=diag)
+    raise TypeError(f"cannot adapt {type(A).__name__} to a LinearOperator")

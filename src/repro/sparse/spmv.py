@@ -3,16 +3,20 @@
 ``spmv(A, x, engine=...)`` routes on (matrix type, engine) through a
 registry instead of a hard-coded isinstance chain:
 
-    format      engine="jnp"        engine="pallas"
+    format      engine="jnp"        other engines
     ---------   -----------------   ------------------------------------
-    DIAMatrix   spmv_dia (shifts)   kernels.spmv_dia (banded TPU kernel)
-    BellMatrix  spmv_bell (gather)  kernels.spmv_bell (Block-ELLPACK)
+    DIAMatrix   spmv_dia (shifts)   "pallas": kernels.spmv_dia (banded)
+    BellMatrix  spmv_bell (gather)  "pallas": kernels.spmv_bell (B-ELL)
+    CSRMatrix   spmv_csr (scatter)  "segsum": spmv_csr_segsum
     jax.Array   A @ x               — (falls back to jnp)
+    any object with .matvec         — (protocol fallback, e.g. the
+                                      matrix-free FunctionOperator)
 
 ``engine="auto"`` picks pallas on TPU and jnp elsewhere; an engine that is
 not registered for the format falls back to jnp, so callers can request
 "pallas" unconditionally. New formats/backends plug in via
-``register_spmv`` without touching any solver code.
+``register_spmv`` without touching any solver code; re-registering an
+existing (format, engine) pair raises unless ``overwrite=True``.
 
 The jnp implementations double as the oracles the Pallas kernels are
 validated against (tests/test_kernels.py, tests/test_sparse.py).
@@ -24,12 +28,14 @@ from typing import Callable, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from .formats import BellMatrix, DIAMatrix
+from .formats import BellMatrix, CSRMatrix, DIAMatrix
 
 __all__ = [
     "spmv",
     "spmv_dia",
     "spmv_bell",
+    "spmv_csr",
+    "spmv_csr_segsum",
     "shifted",
     "register_spmv",
     "spmv_engines",
@@ -59,6 +65,22 @@ def spmv_bell(A: BellMatrix, x: jax.Array) -> jax.Array:
     return (A.vals * gathered).sum(axis=1)
 
 
+def spmv_csr(A: CSRMatrix, x: jax.Array) -> jax.Array:
+    """Reference CSR SPMV: gather columns, scatter-add into rows."""
+    return jnp.zeros((A.n,), x.dtype).at[A.rows].add(A.vals * x[A.cols])
+
+
+def spmv_csr_segsum(A: CSRMatrix, x: jax.Array) -> jax.Array:
+    """CSR SPMV as a sorted segment-sum over per-entry products.
+
+    ``rows`` is sorted by construction, so XLA lowers this to a single
+    contiguous segmented reduction instead of generic scatter-adds.
+    """
+    return jax.ops.segment_sum(
+        A.vals * x[A.cols], A.rows, num_segments=A.n, indices_are_sorted=True
+    )
+
+
 def _spmv_dense(A, x: jax.Array) -> jax.Array:
     return A @ x
 
@@ -82,15 +104,31 @@ def _spmv_bell_pallas(A: BellMatrix, x: jax.Array) -> jax.Array:
 _REGISTRY: Dict[type, Dict[str, Callable]] = {}
 
 
-def register_spmv(mat_type: type, engine: str, fn: Callable) -> None:
-    """Register an SPMV backend for ``mat_type`` under ``engine``."""
-    _REGISTRY.setdefault(mat_type, {})[engine] = fn
+def register_spmv(mat_type: type, engine: str, fn: Callable, *, overwrite: bool = False) -> None:
+    """Register an SPMV backend for ``mat_type`` under ``engine``.
+
+    Raises ValueError if that (format, engine) pair is already registered,
+    unless ``overwrite=True`` — silent replacement hides plug-in clashes.
+    """
+    table = _REGISTRY.setdefault(mat_type, {})
+    if engine in table and not overwrite:
+        raise ValueError(
+            f"SPMV engine {engine!r} already registered for "
+            f"{mat_type.__name__}; pass overwrite=True to replace it"
+        )
+    table[engine] = fn
 
 
 register_spmv(DIAMatrix, "jnp", spmv_dia)
 register_spmv(DIAMatrix, "pallas", _spmv_dia_pallas)
 register_spmv(BellMatrix, "jnp", spmv_bell)
 register_spmv(BellMatrix, "pallas", _spmv_bell_pallas)
+register_spmv(CSRMatrix, "jnp", spmv_csr)
+register_spmv(CSRMatrix, "segsum", spmv_csr_segsum)
+
+
+def _spmv_matvec(A, x: jax.Array) -> jax.Array:
+    return A.matvec(x)
 
 
 def _engines_for(A) -> Dict[str, Callable]:
@@ -101,6 +139,8 @@ def _engines_for(A) -> Dict[str, Callable]:
         table.update(_REGISTRY.get(klass, {}))
     if table:
         return table
+    if hasattr(A, "matvec"):  # LinearOperator protocol (matrix-free etc.)
+        return {"jnp": _spmv_matvec}
     if isinstance(A, jax.Array) or hasattr(A, "ndim"):
         return {"jnp": _spmv_dense}
     raise TypeError(f"unsupported matrix type {type(A)}")
