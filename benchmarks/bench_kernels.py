@@ -5,16 +5,102 @@ report the traffic model that applies on the TPU target: bytes/element of
 the unfused (8 AXPYs + PC + 3 dots as separate passes) vs fused (one pass)
 iteration core, extracted from the lowered HLO of both variants with the
 same census used for the roofline.
+
+``iteration_cores`` extends this to whole-solver granularity: the three
+iteration cores (jnp / pallas / fused_iter) timed per PIPECG iteration on
+the same operator, with kernel-launches-per-iteration from the jaxpr
+census and achieved bandwidth against the roofline HBM peak. Its results
+land in ``BENCH_kernels.json`` when a path is given (the CI smoke step
+does), seeding the cross-PR benchmark trajectory.
 """
 from __future__ import annotations
+
+import json
 
 import jax
 import jax.numpy as jnp
 
-from repro.launch.roofline import analyze_hlo
+from repro.launch.roofline import HW, analyze_hlo
 from repro.kernels import fused_vma_dots, fused_vma_dots_ref
+from repro.kernels.common import launches_per_iteration
 
 from .common import emit, timeit_call
+
+
+def _structural_bytes_per_elem(core: str, n_diags: int, elem_bytes: int = 4) -> float:
+    """Per-iteration HBM bytes/row each core moves BY CONSTRUCTION (f32).
+
+    jnp        — separate passes: SPMV (band + x + y) + 8 triads
+                 (2 reads, 1 write each) + PC (3) + 3 dots (2 reads each).
+    pallas     — SPMV kernel (band + x + y) + one fused VMA kernel
+                 (11 reads + 9 writes).
+    fused_iter — ONE kernel: band + m + 8 state vecs + inv_diag reads,
+                 9 vector writes (dot partials are noise).
+    """
+    vec = {
+        "jnp": (n_diags + 2) + 8 * 3 + 3 + 3 * 2,
+        "pallas": (n_diags + 2) + (11 + 9),
+        "fused_iter": n_diags + 10 + 9,
+    }[core]
+    return vec * float(elem_bytes)
+
+
+def iteration_cores(grid: int = 24, maxiter: int = 20, json_path: str | None = None):
+    """Time one PIPECG iteration per core on poisson27(grid^3).
+
+    atol=rtol=0 pins the loop at exactly ``maxiter`` iterations, so
+    per-iteration time is wall/maxiter with the (shared) init amortized
+    out of the comparison. On CPU the Pallas cores run in interpret mode
+    — the launch census and traffic model are the TPU-relevant columns
+    there; wall time only orders the cores on TPU itself.
+    """
+    import repro
+    from repro.sparse import poisson27
+
+    A = poisson27(grid)
+    b = jnp.sin(jnp.arange(A.n, dtype=jnp.float32))
+    backend = jax.default_backend()
+    record = {
+        "bench": "kernels/iteration_cores",
+        "n": int(A.n),
+        "n_diags": int(A.data.shape[0]),
+        "maxiter": int(maxiter),
+        "backend": backend,
+        "interpret_kernels": backend != "tpu",
+        "hbm_peak_gbs": HW["hbm_bw"] / 1e9,
+        "cores": {},
+    }
+    for core in ("jnp", "pallas", "fused_iter"):
+        p = repro.plan(A, method="pipecg", engine=core, M="jacobi",
+                       atol=0.0, rtol=0.0, maxiter=maxiter)
+
+        def run(bb, p=p):
+            return p._inner(bb, jnp.zeros_like(bb), jnp.float32(0.0), jnp.float32(0.0))
+
+        launches = launches_per_iteration(run, b)
+        us = timeit_call(p.solve, b, warmup=1, iters=3)
+        us_iter = us / maxiter
+        bpe = _structural_bytes_per_elem(core, record["n_diags"])
+        gbs = record["n"] * bpe / (us_iter * 1e-6) / 1e9
+        record["cores"][core] = {
+            "us_per_iter": us_iter,
+            "launches_per_iter": launches,
+            "bytes_per_elem": bpe,
+            "achieved_gbs": gbs,
+            "frac_of_hbm_peak": gbs / (HW["hbm_bw"] / 1e9),
+            "trace_count": p.trace_count,
+        }
+        emit(
+            f"kernels/iteration_cores/{core}",
+            us_iter,
+            f"N={record['n']};launches_per_iter={launches};"
+            f"bytes_per_elem={bpe:.0f};achieved={gbs:.2f}GB/s",
+        )
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+        emit("kernels/iteration_cores/json", 0.0, json_path)
+    return record
 
 
 # one jit per op = one kernel launch per op, like the paper's unoptimized
@@ -42,7 +128,12 @@ def unfused_calls(z, q, s, p, x, r, u, w, n, m, inv, alpha, beta):
     return z, q, s, p, x, r, u, w, m, jnp.stack([gamma, delta, uu])
 
 
-def main(n: int = 1 << 20):
+def main(n: int = 1 << 20, *, json_path: str | None = None, tiny: bool = False):
+    if tiny:
+        n = 1 << 16
+        iteration_cores(grid=8, maxiter=5, json_path=json_path)
+    else:
+        iteration_cores(json_path=json_path)
     key = jax.random.PRNGKey(0)
     vecs = [jax.random.normal(jax.random.PRNGKey(i), (n,)) for i in range(10)]
     inv = jnp.abs(jax.random.normal(key, (n,))) + 0.5

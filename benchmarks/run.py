@@ -8,14 +8,21 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_overlap         — h1/h2/h3 collective schedules (8-dev subprocess)
   bench_poisson         — Fig. 8: 125-pt Poisson + perf-model decomposition
   bench_roofline_table  — the 40-cell dry-run roofline (reads experiments/)
+
+CLI: ``--only SECTION`` runs one section, ``--tiny`` shrinks problem
+sizes for smoke runs, and ``--json PATH`` makes sections that support it
+(today: kernels) write a machine-readable record — CI runs
+``--only kernels --tiny --json BENCH_kernels.json`` to track the
+iteration-core trajectory across PRs.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
     from . import (
         bench_convergence,
         bench_kernels,
@@ -26,18 +33,34 @@ def main() -> None:
     )
 
     sections = [
-        ("convergence", bench_convergence.main),
-        ("solver_methods", bench_solver_methods.main),
-        ("kernels", bench_kernels.main),
-        ("overlap", bench_overlap.main),
-        ("poisson", bench_poisson.main),
-        ("roofline_table", bench_roofline_table.main),
+        ("convergence", bench_convergence.main, {}),
+        ("solver_methods", bench_solver_methods.main, {}),
+        ("kernels", bench_kernels.main, {"json_path": True, "tiny": True}),
+        ("overlap", bench_overlap.main, {}),
+        ("poisson", bench_poisson.main, {}),
+        ("roofline_table", bench_roofline_table.main, {}),
     ]
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", choices=[s[0] for s in sections], default=None,
+                    help="run a single section")
+    ap.add_argument("--tiny", action="store_true",
+                    help="shrink problem sizes (CI smoke)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write a JSON record for sections that support it")
+    args = ap.parse_args(argv)
+
     print("name,us_per_call,derived")
     failed = []
-    for name, fn in sections:
+    for name, fn, accepts in sections:
+        if args.only is not None and name != args.only:
+            continue
+        kwargs = {}
+        if accepts.get("json_path") and args.json:
+            kwargs["json_path"] = args.json
+        if accepts.get("tiny") and args.tiny:
+            kwargs["tiny"] = True
         try:
-            fn()
+            fn(**kwargs)
         except Exception:
             failed.append(name)
             traceback.print_exc()

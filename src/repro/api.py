@@ -20,8 +20,14 @@ handle — serving-loop economics without holding a plan handle.
     "pipecg_distributed" / "h1" /   shard_map over ``shards`` devices with
     "h2" / "h3"                     the named hybrid schedule (default h3)
 
-``engine`` selects the kernel backend ("jnp", "pallas", "auto" = pallas on
-TPU) for the iteration core and the SPMV dispatch. ``M`` may be a
+``engine`` selects the iteration-core backend: "jnp" (reference),
+"pallas" (fused VMA+dots kernel, SPMV separate), "fused_iter" (the whole
+PIPECG iteration — banded SPMV + Jacobi/identity PC + 8 VMAs + 3 dot
+partials — as ONE Pallas kernel; DIAMatrix only), or "auto" (fused_iter
+on TPU when eligible, else pallas on TPU, jnp elsewhere). ``spmv_engine``
+independently picks the SPMV backend ("jnp"/"pallas"/"segsum"/"bf16"/
+"auto"); "bf16" streams band data at half precision with f32 accumulation
+and turns on residual replacement by default. ``M`` may be a
 preconditioner object, the string "jacobi" (default) or None/"identity".
 ``A`` may be any ``LinearOperator`` — materialized (``DIAMatrix``/
 ``BellMatrix``/``CSRMatrix``/dense) or matrix-free
@@ -71,8 +77,8 @@ def solve(
     """Solve SPD ``A x = b`` once; see module docstring for method/engine axes.
 
     Extra keyword arguments are forwarded to the method implementation —
-    e.g. ``replace_every`` (pipecg), ``shards``/``weights``/``partition``/
-    ``mesh`` (distributed methods). A keyword the method does not accept
+    e.g. ``replace_every``/``spmv_engine``/``tile`` (pipecg),
+    ``shards``/``weights``/``partition``/``mesh`` (distributed methods). A keyword the method does not accept
     raises TypeError (nothing is silently dropped). Nonzero ``x0`` is
     supported everywhere — distributed methods solve the shifted system
     ``A d = b - A x0`` and return ``x0 + d``.

@@ -16,17 +16,38 @@ computation — the slack the paper's hybrid methods exploit. What differs
 between executions is pure strategy, injected as three callables:
 
 * the **iteration core** (``get_core``): how the 8 VMAs + PC + dot
-  partials are evaluated — ``"jnp"`` (XLA fuses what it can) or
-  ``"pallas"`` (one explicit single-pass TPU kernel, paper §V-B).
+  partials are evaluated — ``"jnp"`` (XLA fuses what it can),
+  ``"pallas"`` (one explicit single-pass TPU kernel, paper §V-B), or
+  ``"fused_iter"`` (the SPMV folded in too — ONE kernel per iteration,
+  Rupp et al. arXiv 1410.4054).
 * the **SPMV strategy** (``spmv_fn``): dense / DIA / BELL on one device
   (``sparse.spmv`` engine dispatch), or all-gather / halo-ppermute row
   blocks inside ``shard_map`` (``core.distributed``).
 * the **reduction strategy** (``core.reduce``): identity on one device,
   three separate psums (h1) or one packed psum (h2/h3) on a mesh.
 
+The core x operator selection matrix (see ``sparse.spmv`` for the
+orthogonal SPMV-engine axis):
+
+    core          needs                    SPMV per iteration    kernels/iter
+    -----------   ----------------------   -------------------   ------------
+    "jnp"         any LinearOperator       via spmv_fn           XLA-fused
+    "pallas"      any LinearOperator       via spmv_fn           2 (VMA+SPMV)
+    "fused_iter"  DIAMatrix, bandwidth     inside the kernel     1
+                  <= tile, Jacobi or
+                  identity PC
+    "auto"        resolves: fused_iter on TPU when its "needs" hold,
+                  else pallas on TPU, else jnp.
+
+``"fused_iter"`` cores are built per operator (``register_core`` accepts
+factories flagged ``needs_operator``) and carry ``fuses_spmv=True`` —
+``run_pipecg`` then drops the carried n vector and the per-iteration
+``spmv_fn`` call, since the kernel computes n = A m itself. Such cores
+run on padded operands pinned once per solve (``core.pipecg``).
+
 ``run_pipecg`` is the single solver loop all of them share; there is
 exactly one implementation of the recurrence in the repository
-(``pipecg_vma_core``) and the Pallas kernel's oracle delegates to it.
+(``pipecg_vma_core``) and both Pallas kernels' oracles delegate to it.
 """
 from __future__ import annotations
 
@@ -41,6 +62,8 @@ __all__ = [
     "dot_f32",
     "pipecg_vma_core",
     "vma_core_pallas",
+    "make_fused_iter_core",
+    "resolve_core_name",
     "get_core",
     "core_names",
     "register_core",
@@ -87,14 +110,77 @@ def vma_core_pallas(z, q, s, p, x, r, u, w, n, m, inv_diag, alpha, beta):
     return (*vecs, (dots[0], dots[1], dots[2]))
 
 
-_CORES = {"jnp": pipecg_vma_core, "pallas": vma_core_pallas}
+def make_fused_iter_core(A, *, tile: Optional[int] = None,
+                         interpret: Optional[bool] = None,
+                         data_dtype=None) -> Callable:
+    """Build a whole-iteration core for one DIA operator (ONE kernel/iter).
+
+    The returned core fuses the banded SPMV n = A m into the VMA + PC +
+    dot-partials pass (``kernels.fused_iter``), so ``run_pipecg`` launches
+    a single Pallas kernel per iteration. It operates on *padded* vectors
+    of length ``core.n_pad`` (a multiple of ``core.tile``); the padded
+    diagonal data is pinned on the core at build time — build once per
+    plan, not per solve. ``data_dtype`` (e.g. ``jnp.bfloat16``) stores the
+    pinned diagonals in reduced precision while the kernel still
+    accumulates in f32 — the mixed-precision band storage of the "bf16"
+    SPMV engine, applied to the fused path.
+
+    Attributes: ``fuses_spmv=True`` (run_pipecg drops its per-iteration
+    spmv_fn call), ``n_pad``, ``tile``, ``padded_data``, ``offsets``.
+    """
+    from ..kernels.common import ceil_to, interpret_default
+    from ..kernels.fused_iter import fused_iter_step, fused_iter_tile
+    from ..sparse.formats import DIAMatrix
+
+    if not isinstance(A, DIAMatrix):
+        raise TypeError(
+            f"core 'fused_iter' needs a DIAMatrix operator (its SPMV is a "
+            f"fused banded kernel), got {type(A).__name__}"
+        )
+    t = fused_iter_tile(A.bandwidth, tile)
+    n_pad = ceil_to(A.n, t)
+    dp = jnp.pad(A.data, ((0, 0), (0, n_pad - A.n)))
+    if data_dtype is not None:
+        dp = dp.astype(data_dtype)
+    if interpret is None:
+        interpret = interpret_default()
+    offsets = A.offsets
+
+    def core(z, q, s, p, x, r, u, w, m, inv_diag, alpha, beta):
+        inv = inv_diag if inv_diag is not None else jnp.ones_like(w)
+        *vecs, dots = fused_iter_step(
+            dp, offsets, z, q, s, p, x, r, u, w, m, inv, alpha, beta,
+            tile=t, interpret=interpret,
+        )
+        return (*vecs, (dots[0], dots[1], dots[2]))
+
+    core.fuses_spmv = True
+    core.n_pad = n_pad
+    core.tile = t
+    core.padded_data = dp
+    core.offsets = offsets
+    core.interpret = interpret
+    return core
+
+
+make_fused_iter_core.needs_operator = True
+
+_CORES = {
+    "jnp": pipecg_vma_core,
+    "pallas": vma_core_pallas,
+    "fused_iter": make_fused_iter_core,
+}
 
 
 def register_core(name: str, core: Callable, *, overwrite: bool = False) -> None:
     """Register an alternative iteration-core engine (plug-in point).
 
-    Raises ValueError if ``name`` is already registered, unless
-    ``overwrite=True`` — silent replacement hides plug-in clashes.
+    ``core`` is either a plain core callable (the ``pipecg_vma_core``
+    contract) or, when flagged ``core.needs_operator = True``, a factory
+    ``core(A, **kwargs) -> core_fn`` built per operator (the
+    ``fused_iter`` pattern). Raises ValueError if ``name`` is already
+    registered, unless ``overwrite=True`` — silent replacement hides
+    plug-in clashes.
     """
     if name in _CORES and not overwrite:
         raise ValueError(
@@ -107,12 +193,35 @@ def core_names() -> Tuple[str, ...]:
     return tuple(sorted(_CORES))
 
 
-def get_core(engine: str) -> Callable:
-    if engine == "auto":
-        engine = "pallas" if jax.default_backend() == "tpu" else "jnp"
+def resolve_core_name(engine: str, A=None) -> str:
+    """The core name ``get_core`` will build for this engine/operator.
+
+    "auto" prefers, in order: "fused_iter" on TPU when the operator is a
+    DIAMatrix whose bandwidth fits the kernel tile (Jacobi/identity PC
+    checked by the caller), "pallas" on TPU, else "jnp" — the transparent
+    fallback chain for operators the fused kernel cannot take.
+    """
+    if engine != "auto":
+        return engine
+    if jax.default_backend() != "tpu":
+        return "jnp"
+    from ..kernels.fused_iter import TILE
+    from ..sparse.formats import DIAMatrix
+
+    if isinstance(A, DIAMatrix) and A.bandwidth < TILE:
+        return "fused_iter"
+    return "pallas"
+
+
+def get_core(engine: str, A=None, **factory_kwargs) -> Callable:
+    """Resolve an iteration core; operator-built cores take ``A`` (+kwargs)."""
+    engine = resolve_core_name(engine, A)
     if engine not in _CORES:
         raise ValueError(f"unknown iteration engine {engine!r}; have {core_names()}")
-    return _CORES[engine]
+    core = _CORES[engine]
+    if getattr(core, "needs_operator", False):
+        return core(A, **factory_kwargs)
+    return core
 
 
 # ---------------------------------------------------------------------------
@@ -132,17 +241,28 @@ def run_pipecg(
     rtol,
     maxiter: int,
     replace_every: int = 0,
+    replace_spmv_fn: Optional[Callable[[jax.Array], jax.Array]] = None,
 ):
     """One PIPECG solve, generic over SPMV / PC / core / reduction strategy.
 
     Must be called under ``jit`` (or inside ``shard_map``); ``maxiter`` and
     ``replace_every`` are Python ints (static). When ``inv_diag`` is given
     the core fuses the Jacobi PC; otherwise ``pc_fn`` is applied to w each
-    iteration. Returns ``(iterations, x, residual_norm, converged, history)``
-    as raw arrays so callers can rewrap (SolveResult / shard_map out_specs).
+    iteration. Cores flagged ``fuses_spmv`` (``make_fused_iter_core``)
+    compute n = A m inside the kernel: the loop then carries no n vector
+    and issues no per-iteration ``spmv_fn`` call — ``spmv_fn`` is still
+    used for init and residual replacement. ``replace_spmv_fn`` overrides
+    the SPMV used by residual replacement only: the full-precision safety
+    net (f32, or f64 under x64) when the iteration SPMV runs reduced
+    precision (the "bf16" engine). Returns ``(iterations, x,
+    residual_norm, converged, history)`` as raw arrays so callers can
+    rewrap (SolveResult / shard_map out_specs).
     """
     if reducer is None:
         reducer = make_reducer("local")
+    if replace_spmv_fn is None:
+        replace_spmv_fn = spmv_fn
+    fused_spmv = bool(getattr(core, "fuses_spmv", False))
     dtype = b.dtype
 
     # init (Alg. 2 lines 1-3)
@@ -152,7 +272,8 @@ def run_pipecg(
     gamma0, delta0, nn0 = reducer(dot_f32(r0, u0), dot_f32(w0, u0), dot_f32(u0, u0))
     norm0 = jnp.sqrt(nn0)
     m0 = pc_fn(w0)
-    n0 = spmv_fn(m0)
+    # a fused core computes n = A m itself; carry a width-0 placeholder
+    n0 = jnp.zeros((0,), dtype) if fused_spmv else spmv_fn(m0)
     thresh = jnp.maximum(jnp.asarray(atol, norm0.dtype), jnp.asarray(rtol, norm0.dtype) * norm0)
     hist0 = jnp.full((maxiter + 1,), jnp.nan, jnp.float32).at[0].set(norm0.astype(jnp.float32))
     zv = jnp.zeros_like(b)
@@ -170,16 +291,22 @@ def run_pipecg(
         alpha = jnp.where(
             i > 0, gamma / (delta - beta * gamma / alpha_prev), gamma / delta
         )
-        # the one canonical core (lines 10-21)
-        z, q, s, p, x, r, u, w, m, (g_p, d_p, n_p) = core(
-            z, q, s, p, x, r, u, w, n, m, inv_diag, alpha.astype(dtype), beta.astype(dtype)
-        )
-        if inv_diag is None:
-            m = pc_fn(w)  # general (non-fused) preconditioner
+        # the one canonical core (lines 10-21; +22 when the core fuses it)
+        if fused_spmv:
+            z, q, s, p, x, r, u, w, m, (g_p, d_p, n_p) = core(
+                z, q, s, p, x, r, u, w, m, inv_diag, alpha.astype(dtype), beta.astype(dtype)
+            )
+        else:
+            z, q, s, p, x, r, u, w, m, (g_p, d_p, n_p) = core(
+                z, q, s, p, x, r, u, w, n, m, inv_diag, alpha.astype(dtype), beta.astype(dtype)
+            )
+            if inv_diag is None:
+                m = pc_fn(w)  # general (non-fused) preconditioner
         # the reduction(s): results consumed next iteration only
         gamma_new, delta_new, uu = reducer(g_p, d_p, n_p)
-        # SPMV (line 22) — independent of the reductions: overlap target
-        n = spmv_fn(m)
+        if not fused_spmv:
+            # SPMV (line 22) — independent of the reductions: overlap target
+            n = spmv_fn(m)
         norm_new = jnp.sqrt(uu)
 
         if replace_every > 0:
@@ -188,14 +315,14 @@ def run_pipecg(
             # recurrence roundoff drift that plain PIPECG accumulates.
             def _replace(args):
                 x, p, *_ = args
-                r = b - spmv_fn(x)
+                r = b - replace_spmv_fn(x)
                 u = pc_fn(r)
-                w = spmv_fn(u)
-                s = spmv_fn(p)
+                w = replace_spmv_fn(u)
+                s = replace_spmv_fn(p)
                 q = pc_fn(s)
-                z = spmv_fn(q)
+                z = replace_spmv_fn(q)
                 m = pc_fn(w)
-                n = spmv_fn(m)
+                n = jnp.zeros((0,), dtype) if fused_spmv else replace_spmv_fn(m)
                 gamma, delta, nn = reducer(dot_f32(r, u), dot_f32(w, u), dot_f32(u, u))
                 return x, p, r, u, w, s, q, z, m, n, gamma, delta, jnp.sqrt(nn)
 

@@ -1,5 +1,8 @@
 """Pallas TPU kernels for the compute hot spots the paper optimizes.
 
+fused_iter — the WHOLE PIPECG iteration: banded DIA SPMV + 8 VMAs +
+             Jacobi PC + dot partials in one grid walk, so one iteration
+             launches one kernel (Rupp et al., arXiv 1410.4054).
 fused_vma  — PIPECG iteration core: 8 VMAs + Jacobi PC + dot partials,
              one HBM pass (paper §V-B kernel fusion, extended).
 fused_dot  — gamma/delta/(u,u) in one pass (merged reductions).
@@ -16,6 +19,7 @@ interpret=True on CPU.
 from .flash_attn import flash_attention, flash_attention_ref
 from .fused_adam import fused_adamw, fused_adamw_ref
 from .fused_dot import fused_dots, fused_dots_ref
+from .fused_iter import fused_iter_ref, fused_iter_step, fused_iter_tile
 from .fused_vma import fused_vma_dots, fused_vma_dots_ref
 from .spmv_bell import spmv_bell_pallas, spmv_bell_ref
 from .spmv_dia import spmv_dia_pallas, spmv_dia_ref
@@ -27,6 +31,9 @@ __all__ = [
     "fused_adamw_ref",
     "fused_dots",
     "fused_dots_ref",
+    "fused_iter_ref",
+    "fused_iter_step",
+    "fused_iter_tile",
     "fused_vma_dots",
     "fused_vma_dots_ref",
     "spmv_bell_pallas",

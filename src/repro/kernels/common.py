@@ -38,3 +38,69 @@ def pad1d(x: jax.Array, n_pad: int) -> jax.Array:
 def as_2d(x: jax.Array, lane: int = LANE) -> jax.Array:
     """(n_pad,) -> (n_pad // lane, lane) view for TPU-native tiling."""
     return x.reshape(-1, lane)
+
+
+# ---------------------------------------------------------------------------
+# jaxpr census — count kernel launches (and pad traffic) per program region
+# ---------------------------------------------------------------------------
+
+def _sub_jaxprs(params):
+    from jax import core as jcore
+
+    for v in params.values():
+        vals = v if isinstance(v, (tuple, list)) else (v,)
+        for item in vals:
+            if isinstance(item, jcore.ClosedJaxpr):
+                yield item.jaxpr
+            elif isinstance(item, jcore.Jaxpr):
+                yield item
+
+
+def count_primitive(jaxpr, name: str, *, into_kernels: bool = True) -> int:
+    """Occurrences of primitive ``name`` in a jaxpr, recursing into
+    sub-jaxprs (pjit bodies, while cond/body, cond branches, ...).
+
+    ``into_kernels=False`` stops recursion at ``pallas_call`` boundaries:
+    ops inside a kernel body run on-chip per tile, so e.g. a ``pad``
+    there is not per-iteration HBM traffic and should not count against
+    a "no padding in the hot loop" invariant.
+    """
+    total = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == name:
+            total += 1
+        if not into_kernels and eqn.primitive.name == "pallas_call":
+            continue
+        for sub in _sub_jaxprs(eqn.params):
+            total += count_primitive(sub, name, into_kernels=into_kernels)
+    return total
+
+
+def while_body_jaxpr(jaxpr):
+    """The body jaxpr of the first ``while`` found (recursively), or None.
+
+    For the solver loops this is the per-iteration program region — the
+    thing whose kernel-launch count the fusion work drives to 1.
+    """
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "while":
+            return eqn.params["body_jaxpr"].jaxpr
+        for sub in _sub_jaxprs(eqn.params):
+            found = while_body_jaxpr(sub)
+            if found is not None:
+                return found
+    return None
+
+
+def launches_per_iteration(fn, *args, primitive: str = "pallas_call") -> int:
+    """Count ``primitive`` occurrences inside ``fn``'s solver-loop body.
+
+    Traces ``fn(*args)`` (no execution) and censuses the first while
+    loop's body — i.e. kernel launches per solver iteration. Returns -1
+    if the trace contains no while loop.
+    """
+    closed = jax.make_jaxpr(fn)(*args)
+    body = while_body_jaxpr(closed.jaxpr)
+    if body is None:
+        return -1
+    return count_primitive(body, primitive)

@@ -1,0 +1,12 @@
+from .kernel import TILE, fused_iter_padded
+from .ops import fused_iter_step, fused_iter_tile, trace_count
+from .ref import fused_iter_ref
+
+__all__ = [
+    "TILE",
+    "fused_iter_padded",
+    "fused_iter_ref",
+    "fused_iter_step",
+    "fused_iter_tile",
+    "trace_count",
+]

@@ -1,0 +1,26 @@
+"""Oracle for the whole-iteration fused kernel.
+
+Delegates to the two canonical implementations the rest of the repo
+runs — ``spmv_dia_ref`` for n = A m and ``core.iteration.pipecg_vma_core``
+for the recurrence — so the fused kernel is validated against exactly the
+math of the unfused path (exact-recurrence parity, not a re-derivation).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..spmv_dia.ref import spmv_dia_ref
+
+
+def fused_iter_ref(data, offsets, z, q, s, p, x, r, u, w, m, inv_diag, alpha, beta):
+    """n = A m, then the canonical PIPECG recurrence on it.
+
+    Same contract as the fused kernel: returns (z', q', s', p', x', r',
+    u', w', m', (gamma, delta, ||u||^2)).
+    """
+    from ...core.iteration import pipecg_vma_core  # lazy: core imports kernels
+
+    alpha = jnp.asarray(alpha, dtype=z.dtype)
+    beta = jnp.asarray(beta, dtype=z.dtype)
+    n_vec = spmv_dia_ref(data, offsets, m)
+    return pipecg_vma_core(z, q, s, p, x, r, u, w, n_vec, m, inv_diag, alpha, beta)

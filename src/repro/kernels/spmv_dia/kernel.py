@@ -34,8 +34,15 @@ def _kernel(offsets, tile, dat_ref, xl_ref, xc_ref, xr_ref, y_o):
     y_o[...] = acc.astype(y_o.dtype)
 
 
-def spmv_dia_padded(data, offsets: tuple[int, ...], x, *, tile: int, interpret: bool):
-    """data (k, n_pad), x (n_pad,) with n_pad % tile == 0; bandwidth <= tile."""
+def spmv_dia_padded(data, offsets: tuple[int, ...], x, *, tile: int, interpret: bool,
+                    out_dtype=None):
+    """data (k, n_pad), x (n_pad,) with n_pad % tile == 0; bandwidth <= tile.
+
+    ``out_dtype`` decouples output from storage precision: the kernel
+    always accumulates in f32, so bf16 ``data``/``x`` with
+    ``out_dtype=f32`` is the mixed-precision (bf16-storage /
+    f32-accumulate) SPMV.
+    """
     n_pad = x.shape[0]
     assert n_pad % tile == 0
     tiles = n_pad // tile
@@ -52,7 +59,7 @@ def spmv_dia_padded(data, offsets: tuple[int, ...], x, *, tile: int, interpret: 
             pl.BlockSpec((tile,), lambda i: (jnp.minimum(i + 1, last),)),
         ],
         out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n_pad,), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), out_dtype or x.dtype),
         interpret=interpret,
     )
     return fn(data, x, x, x)

@@ -15,25 +15,29 @@ __all__ = ["spmv_dia_pallas"]
 _DEFAULT_TILE = 4096
 
 
-@partial(jax.jit, static_argnames=("offsets", "tile", "interpret"))
-def _spmv(data, offsets, x, tile: int, interpret: bool):
+@partial(jax.jit, static_argnames=("offsets", "tile", "interpret", "out_dtype"))
+def _spmv(data, offsets, x, tile: int, interpret: bool, out_dtype):
     n = x.shape[0]
     n_pad = ceil_to(n, tile)
     xp = pad1d(x, n_pad)
     dp = jnp.pad(data, ((0, 0), (0, n_pad - n)))
-    y = spmv_dia_padded(dp, offsets, xp, tile=tile, interpret=interpret)
+    y = spmv_dia_padded(dp, offsets, xp, tile=tile, interpret=interpret, out_dtype=out_dtype)
     return y[:n]
 
 
-def spmv_dia_pallas(A: DIAMatrix, x: jax.Array, tile: int | None = None, interpret: bool | None = None):
+def spmv_dia_pallas(A: DIAMatrix, x: jax.Array, tile: int | None = None,
+                    interpret: bool | None = None, out_dtype=None):
     """y = A @ x for a DIA matrix via the Pallas banded kernel.
 
     ``tile`` must be >= the matrix bandwidth (halo lives in the neighbor
-    blocks); it is auto-raised (LANE-aligned) when needed.
+    blocks); it is auto-raised (LANE-aligned) when needed. ``out_dtype``
+    (default: x.dtype) lets bf16-storage inputs emit the f32-accumulated
+    result without a round trip through bf16.
     """
     if interpret is None:
         interpret = interpret_default()
     bw = A.bandwidth
     t = tile or _DEFAULT_TILE
     t = max(t, ceil_to(bw + 1, LANE))
-    return _spmv(A.data, A.offsets, x, t, interpret)
+    out_dtype = jnp.dtype(out_dtype) if out_dtype is not None else None
+    return _spmv(A.data, A.offsets, x, t, interpret, out_dtype)

@@ -36,11 +36,17 @@ def main(argv=None):
                     help="solver method; h1/h2/h3 are distributed (set --shards); "
                          "default: pipecg, or h3 when --shards > 1")
     ap.add_argument("--solver", default=None, help="deprecated alias for --method")
-    ap.add_argument("--engine", default="auto", choices=["auto", "jnp", "pallas"])
+    ap.add_argument("--engine", default="auto",
+                    choices=["auto", "jnp", "pallas", "fused_iter"],
+                    help="iteration core; fused_iter = whole-iteration kernel (pipecg, DIA)")
+    ap.add_argument("--spmv-engine", default=None,
+                    choices=["auto", "jnp", "pallas", "segsum", "bf16"],
+                    help="SPMV backend (pipecg); bf16 = half-traffic mixed precision")
     ap.add_argument("--shards", type=int, default=1)
     ap.add_argument("--atol", type=float, default=1e-5)
     ap.add_argument("--maxiter", type=int, default=10000)
-    ap.add_argument("--replace-every", type=int, default=0)
+    ap.add_argument("--replace-every", type=int, default=None,
+                    help="residual-replacement period (default: 0, or 50 under bf16)")
     ap.add_argument("--weighted", action="store_true", help="nnz perf-model partition (h3)")
     ap.add_argument("--rhs", type=int, default=1,
                     help="number of right-hand sides served through the one plan")
@@ -66,7 +72,7 @@ def main(argv=None):
         elif method in distributed:
             ap.error(f"--method {method} is distributed; set --shards > 1")
         if method == "pipecg":
-            kw = {"replace_every": args.replace_every}
+            kw = {"replace_every": args.replace_every, "spmv_engine": args.spmv_engine}
 
     # --- the plan/execute split: setup once... ---
     p = plan(A, method=method, engine=args.engine, M="jacobi",

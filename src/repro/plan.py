@@ -99,10 +99,11 @@ def _solve_chronopoulos(A, b, *, M, x0, atol, rtol, maxiter, engine):
 
 
 def _solve_pipecg(A, b, *, M, x0, atol, rtol, maxiter, engine,
-                  replace_every=0, spmv_engine=None):
+                  replace_every=None, spmv_engine=None, tile=None, core=None):
     return pipecg(
         A, b, M=M, x0=x0, atol=atol, rtol=rtol, maxiter=maxiter,
         engine=engine, spmv_engine=spmv_engine, replace_every=replace_every,
+        tile=tile, core=core,
     )
 
 
@@ -186,11 +187,28 @@ class SolverPlan:
                 )
         self.kwargs = dict(kwargs)
         A, M, engine, maxiter = self.A, self.M, self.engine, self.maxiter
+        call_kwargs = dict(kwargs)
+        if self.method == "pipecg" and call_kwargs.get("core") is None:
+            # plan-time pinning: build the operator-bound fused_iter core
+            # (padded diagonal views and all) ONCE here, not per trace —
+            # the while-loop body then does zero padding/reshaping and
+            # repeated solves reuse the exact same kernel closure
+            from .core.pipecg import pin_pipecg_core
+
+            core = pin_pipecg_core(
+                A, M, engine,
+                spmv_engine=call_kwargs.get("spmv_engine"),
+                replace_every=call_kwargs.get("replace_every"),
+                tile=call_kwargs.get("tile"),
+            )
+            if core is not None:
+                call_kwargs["core"] = core
+        self._core = call_kwargs.get("core")
 
         def _inner(b, x0, atol, rtol):
             self._traces += 1  # runs at trace time only
             return fn(A, b, M=M, x0=x0, atol=atol, rtol=rtol,
-                      maxiter=maxiter, engine=engine, **kwargs)
+                      maxiter=maxiter, engine=engine, **call_kwargs)
 
         self._inner = _inner
         self._run = jax.jit(_inner)
@@ -347,6 +365,20 @@ class SolverPlan:
             )
         else:
             d.update({k: v for k, v in self.kwargs.items() if v is not None})
+            if self.method == "pipecg":
+                from .core.pipecg import _resolve_config
+
+                try:
+                    cn, se, rep = _resolve_config(
+                        self.A, self.M, self.engine,
+                        self.kwargs.get("spmv_engine"),
+                        self.kwargs.get("replace_every"),
+                        getattr(self, "_core", None),
+                    )
+                except (TypeError, ValueError):
+                    pass
+                else:
+                    d.update(core=cn, spmv_engine=se, replace_every=rep)
         return d
 
     def __repr__(self) -> str:
@@ -360,9 +392,12 @@ def plan(A, method: str = "pipecg", engine: str = "auto", M="jacobi",
     """Build a reusable :class:`SolverPlan` for ``A`` (see module docstring).
 
     Keyword arguments mirror ``repro.solve``: ``replace_every``/
-    ``spmv_engine`` (pipecg), ``shards``/``weights``/``partition``/``mesh``
-    (distributed methods). ``atol``/``rtol`` set the plan's *defaults* —
-    ``plan.solve(b, atol=...)`` overrides per call without retracing.
+    ``spmv_engine``/``tile`` (pipecg — a pipecg plan with
+    ``engine="fused_iter"`` builds the whole-iteration fused core and its
+    padded operator views once, right here), ``shards``/``weights``/
+    ``partition``/``mesh`` (distributed methods). ``atol``/``rtol`` set
+    the plan's *defaults* — ``plan.solve(b, atol=...)`` overrides per
+    call without retracing.
     """
     return SolverPlan(A, method=method, engine=engine, M=M,
                       atol=atol, rtol=rtol, maxiter=maxiter, **kwargs)

@@ -1,22 +1,37 @@
 """SPMV engine dispatch — one entry point, per-format/per-engine backends.
 
 ``spmv(A, x, engine=...)`` routes on (matrix type, engine) through a
-registry instead of a hard-coded isinstance chain:
+registry instead of a hard-coded isinstance chain. The full selection
+matrix (engine x format):
 
-    format      engine="jnp"        other engines
-    ---------   -----------------   ------------------------------------
-    DIAMatrix   spmv_dia (shifts)   "pallas": kernels.spmv_dia (banded)
-    BellMatrix  spmv_bell (gather)  "pallas": kernels.spmv_bell (B-ELL)
-    CSRMatrix   spmv_csr (scatter)  "segsum": spmv_csr_segsum
-    jax.Array   A @ x               — (falls back to jnp)
-    any object with .matvec         — (protocol fallback, e.g. the
-                                      matrix-free FunctionOperator)
+    engine      DIAMatrix            BellMatrix          CSRMatrix
+    ---------   ------------------   -----------------   ------------------
+    "jnp"       spmv_dia (shifts)    spmv_bell (gather)  spmv_csr (scatter)
+    "pallas"    kernels.spmv_dia     kernels.spmv_bell   — (jnp fallback)
+                (banded, 3-window)   (B-ELL, VMEM x)
+    "segsum"    — (jnp fallback)     — (jnp fallback)    spmv_csr_segsum
+    "bf16"      spmv_dia_bf16        — (jnp fallback)    — (jnp fallback)
+                (bf16 storage,
+                 f32 accumulate)
 
-``engine="auto"`` picks pallas on TPU and jnp elsewhere; an engine that is
+    jax.Array            -> A @ x (dense "jnp" fallback)
+    object with .matvec  -> protocol fallback (matrix-free FunctionOperator)
+
+``engine="auto"`` resolution (see :func:`resolve_engine`): "pallas" on
+TPU when registered for the format; otherwise the fastest registered
+non-reference engine for this backend — today that is "segsum" for
+``CSRMatrix`` on CPU/GPU (a sorted segmented reduction, much faster than
+the scatter-add reference) — falling back to "jnp". An engine that is
 not registered for the format falls back to jnp, so callers can request
 "pallas" unconditionally. New formats/backends plug in via
 ``register_spmv`` without touching any solver code; re-registering an
 existing (format, engine) pair raises unless ``overwrite=True``.
+
+"bf16" is the mixed-precision engine the communication-reduced CG
+variants lean on (arXiv 2501.03743): band data and x are stored/streamed
+as bf16 (half the HBM traffic of f32) while products accumulate in f32.
+It is meant to be paired with residual replacement — ``repro.plan``
+turns ``replace_every`` on by default for plans that select it.
 
 The jnp implementations double as the oracles the Pallas kernels are
 validated against (tests/test_kernels.py, tests/test_sparse.py).
@@ -33,11 +48,13 @@ from .formats import BellMatrix, CSRMatrix, DIAMatrix
 __all__ = [
     "spmv",
     "spmv_dia",
+    "spmv_dia_bf16",
     "spmv_bell",
     "spmv_csr",
     "spmv_csr_segsum",
     "shifted",
     "register_spmv",
+    "resolve_engine",
     "spmv_engines",
 ]
 
@@ -81,6 +98,33 @@ def spmv_csr_segsum(A: CSRMatrix, x: jax.Array) -> jax.Array:
     )
 
 
+def spmv_dia_bf16(A: DIAMatrix, x: jax.Array) -> jax.Array:
+    """Mixed-precision DIA SPMV: bf16 storage/streaming, f32 accumulation.
+
+    Band data and x are cast to bf16 (halving the per-iteration HBM
+    traffic of the memory-bound SPMV), every product accumulates in at
+    least f32, and the result is returned in x's dtype. On TPU this runs
+    the Pallas banded kernel on the bf16 operands (it accumulates f32
+    internally); elsewhere the jnp shift form with explicit f32 upcasts.
+
+    Expect O(1e-2) relative error per apply — pair with residual
+    replacement (``replace_every``) for full-accuracy solves; plans
+    default it on for this engine.
+    """
+    acc = jnp.promote_types(x.dtype, jnp.float32)
+    data16 = A.data.astype(jnp.bfloat16)
+    x16 = x.astype(jnp.bfloat16)
+    if jax.default_backend() == "tpu":
+        from ..kernels.spmv_dia import spmv_dia_pallas
+
+        A16 = DIAMatrix(data16, A.offsets, A.n)
+        return spmv_dia_pallas(A16, x16, out_dtype=acc).astype(x.dtype)
+    y = jnp.zeros(x.shape, acc)
+    for j, o in enumerate(A.offsets):
+        y = y + data16[j].astype(acc) * shifted(x16, o).astype(acc)
+    return y.astype(x.dtype)
+
+
 def _spmv_dense(A, x: jax.Array) -> jax.Array:
     return A @ x
 
@@ -121,6 +165,7 @@ def register_spmv(mat_type: type, engine: str, fn: Callable, *, overwrite: bool 
 
 register_spmv(DIAMatrix, "jnp", spmv_dia)
 register_spmv(DIAMatrix, "pallas", _spmv_dia_pallas)
+register_spmv(DIAMatrix, "bf16", spmv_dia_bf16)
 register_spmv(BellMatrix, "jnp", spmv_bell)
 register_spmv(BellMatrix, "pallas", _spmv_bell_pallas)
 register_spmv(CSRMatrix, "jnp", spmv_csr)
@@ -151,16 +196,38 @@ def spmv_engines(A) -> Tuple[str, ...]:
     return tuple(sorted(_engines_for(A)))
 
 
-def spmv(A, x: jax.Array, engine: str = "auto") -> jax.Array:
-    """y = A @ x through the engine registry.
+def resolve_engine(A, engine: str = "auto") -> str:
+    """The engine name ``spmv(A, x, engine=...)`` will actually run.
 
-    engine="auto" — pallas on TPU (when registered), jnp elsewhere.
-    An engine not registered for this format falls back to "jnp".
+    "auto" resolution, in order:
+
+    1. "pallas" on TPU when registered for this format;
+    2. "segsum" when registered (CSRMatrix on CPU/GPU: the sorted
+       segmented reduction beats the scatter-add reference everywhere);
+    3. "jnp".
+
+    A concrete engine name resolves to itself when registered, else to
+    the "jnp" fallback.
     """
     table = _engines_for(A)
     if engine == "auto":
-        engine = "pallas" if jax.default_backend() == "tpu" and "pallas" in table else "jnp"
-    fn = table.get(engine) or table.get("jnp")
+        if jax.default_backend() == "tpu" and "pallas" in table:
+            return "pallas"
+        if "segsum" in table:
+            return "segsum"
+        return "jnp"
+    return engine if engine in table else "jnp"
+
+
+def spmv(A, x: jax.Array, engine: str = "auto") -> jax.Array:
+    """y = A @ x through the engine registry.
+
+    engine="auto" — see :func:`resolve_engine` (pallas on TPU, segsum for
+    CSR elsewhere, else jnp). An engine not registered for this format
+    falls back to "jnp".
+    """
+    table = _engines_for(A)
+    fn = table.get(resolve_engine(A, engine))
     if fn is None:
         raise ValueError(f"no SPMV engine {engine!r} (or jnp fallback) for {type(A).__name__}")
     return fn(A, x)

@@ -60,7 +60,7 @@ class TestSpmvDispatch:
         np.testing.assert_allclose(np.asarray(spmv(A, x, engine="pallas")), 2.0 * np.arange(16.0))
 
     def test_engines_listed(self):
-        assert set(spmv_engines(poisson27(4))) == {"jnp", "pallas"}
+        assert set(spmv_engines(poisson27(4))) == {"jnp", "pallas", "bf16"}
         assert spmv_engines(jnp.eye(4)) == ("jnp",)
 
     def test_registry_extension(self):
