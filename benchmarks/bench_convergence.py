@@ -1,11 +1,14 @@
 """Convergence-equivalence table (the paper's implicit Table: all methods
 run to the same tolerance). Reports iterations-to-1e-5 per method per
-matrix and the residual-replacement robustness margin."""
+matrix, the trimmed convergence-curve endpoints (``repro.obs
+.convergence_curve`` — the NaN-padded history sliced to the real curve)
+and the residual-replacement robustness margin."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 from repro.core import chronopoulos_cg, jacobi, pcg, pipecg
+from repro.obs import convergence_curve
 from repro.sparse import poisson27, spmv, table1_matrix
 
 from .common import emit
@@ -29,10 +32,12 @@ def main():
         }
         for meth, res in rows.items():
             true_res = float(jnp.linalg.norm(b - spmv(A, res.x)))
+            curve = convergence_curve(res)  # len(curve) == iterations + 1
             emit(
                 f"convergence/{name}/{meth}",
                 float(res.iterations),
-                f"iters;true_res={true_res:.2e};converged={bool(res.converged)}",
+                f"iters;true_res={true_res:.2e};converged={bool(res.converged)};"
+                f"curve={curve[0]:.1e}->{curve[-1]:.1e}({len(curve)}pts)",
             )
 
 

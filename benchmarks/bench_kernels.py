@@ -15,34 +15,15 @@ does), seeding the cross-PR benchmark trajectory.
 """
 from __future__ import annotations
 
-import json
-
 import jax
 import jax.numpy as jnp
 
 from repro.launch.roofline import HW, analyze_hlo
 from repro.kernels import fused_vma_dots, fused_vma_dots_ref
 from repro.kernels.common import launches_per_iteration
+from repro.obs import structural_bytes_per_elem
 
-from .common import emit, timeit_call
-
-
-def _structural_bytes_per_elem(core: str, n_diags: int, elem_bytes: int = 4) -> float:
-    """Per-iteration HBM bytes/row each core moves BY CONSTRUCTION (f32).
-
-    jnp        — separate passes: SPMV (band + x + y) + 8 triads
-                 (2 reads, 1 write each) + PC (3) + 3 dots (2 reads each).
-    pallas     — SPMV kernel (band + x + y) + one fused VMA kernel
-                 (11 reads + 9 writes).
-    fused_iter — ONE kernel: band + m + 8 state vecs + inv_diag reads,
-                 9 vector writes (dot partials are noise).
-    """
-    vec = {
-        "jnp": (n_diags + 2) + 8 * 3 + 3 + 3 * 2,
-        "pallas": (n_diags + 2) + (11 + 9),
-        "fused_iter": n_diags + 10 + 9,
-    }[core]
-    return vec * float(elem_bytes)
+from .common import bench_record, emit, seed_key, timeit_call, write_bench_json
 
 
 def iteration_cores(grid: int = 24, maxiter: int = 20, json_path: str | None = None):
@@ -60,16 +41,16 @@ def iteration_cores(grid: int = 24, maxiter: int = 20, json_path: str | None = N
     A = poisson27(grid)
     b = jnp.sin(jnp.arange(A.n, dtype=jnp.float32))
     backend = jax.default_backend()
-    record = {
-        "bench": "kernels/iteration_cores",
-        "n": int(A.n),
-        "n_diags": int(A.data.shape[0]),
-        "maxiter": int(maxiter),
-        "backend": backend,
-        "interpret_kernels": backend != "tpu",
-        "hbm_peak_gbs": HW["hbm_bw"] / 1e9,
-        "cores": {},
-    }
+    record = bench_record(
+        "kernels",
+        n=int(A.n),
+        n_diags=int(A.data.shape[0]),
+        maxiter=int(maxiter),
+        backend=backend,
+        interpret_kernels=backend != "tpu",
+        hbm_peak_gbs=HW["hbm_bw"] / 1e9,
+        cores={},
+    )
     for core in ("jnp", "pallas", "fused_iter"):
         p = repro.plan(A, method="pipecg", engine=core, M="jacobi",
                        atol=0.0, rtol=0.0, maxiter=maxiter)
@@ -80,7 +61,7 @@ def iteration_cores(grid: int = 24, maxiter: int = 20, json_path: str | None = N
         launches = launches_per_iteration(run, b)
         us = timeit_call(p.solve, b, warmup=1, iters=3)
         us_iter = us / maxiter
-        bpe = _structural_bytes_per_elem(core, record["n_diags"])
+        bpe = structural_bytes_per_elem(core, record["n_diags"])
         gbs = record["n"] * bpe / (us_iter * 1e-6) / 1e9
         record["cores"][core] = {
             "us_per_iter": us_iter,
@@ -97,9 +78,7 @@ def iteration_cores(grid: int = 24, maxiter: int = 20, json_path: str | None = N
             f"bytes_per_elem={bpe:.0f};achieved={gbs:.2f}GB/s",
         )
     if json_path:
-        with open(json_path, "w") as f:
-            json.dump(record, f, indent=2, sort_keys=True)
-        emit("kernels/iteration_cores/json", 0.0, json_path)
+        write_bench_json(json_path, record)
     return record
 
 
@@ -134,9 +113,8 @@ def main(n: int = 1 << 20, *, json_path: str | None = None, tiny: bool = False):
         iteration_cores(grid=8, maxiter=5, json_path=json_path)
     else:
         iteration_cores(json_path=json_path)
-    key = jax.random.PRNGKey(0)
-    vecs = [jax.random.normal(jax.random.PRNGKey(i), (n,)) for i in range(10)]
-    inv = jnp.abs(jax.random.normal(key, (n,))) + 0.5
+    vecs = [jax.random.normal(seed_key("kernels/vma_core", i), (n,)) for i in range(10)]
+    inv = jnp.abs(jax.random.normal(seed_key("kernels/vma_core/inv"), (n,))) + 0.5
     a, b = jnp.float32(0.3), jnp.float32(0.7)
 
     # the canonical iteration core (core.iteration.pipecg_vma_core) via the

@@ -1,9 +1,36 @@
-"""Shared benchmark helpers. Every benchmark prints ``name,us_per_call,derived`` CSV."""
+"""Shared benchmark helpers. Every benchmark prints ``name,us_per_call,derived`` CSV.
+
+Sections that support ``--json`` additionally write ``BENCH_<topic>.json``
+records through :func:`bench_record`/:func:`write_bench_json`, which stamp
+every record with the environment fingerprint (backend, device kind, x64,
+JAX version — ``repro.obs.env_fingerprint``) and a schema version, so two
+trajectory points are only ever compared when they are comparable
+(``tools/bench_gate.py`` enforces this).
+
+Determinism: all synthetic problem data is derived from :func:`seed_key`
+— a name-keyed PRNG, not an ambient counter — so re-running a benchmark
+reproduces bit-identical inputs and the convergence-iteration columns of
+the trajectory are stable across runs and machines.
+"""
 from __future__ import annotations
 
+import json
 import time
+import zlib
 
 import jax
+
+BENCH_SCHEMA = 2  # bump when record layout changes incompatibly
+
+
+def seed_key(name: str, i: int = 0):
+    """Deterministic PRNGKey for a named benchmark input.
+
+    Keyed on a stable hash of ``name`` (crc32, not Python's salted
+    ``hash``) folded with ``i`` — the same (name, i) yields the same data
+    in every process, which is what makes trajectory points comparable.
+    """
+    return jax.random.fold_in(jax.random.PRNGKey(zlib.crc32(name.encode()) & 0x7FFFFFFF), i)
 
 
 def timeit_call(fn, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -23,3 +50,18 @@ def timeit_call(fn, *args, warmup: int = 2, iters: int = 5) -> float:
 
 def emit(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def bench_record(topic: str, **fields) -> dict:
+    """A BENCH_<topic>.json skeleton: topic + schema + env fingerprint."""
+    from repro.obs import env_fingerprint
+
+    rec = {"bench": topic, "schema": BENCH_SCHEMA, "env": env_fingerprint()}
+    rec.update(fields)
+    return rec
+
+
+def write_bench_json(path: str, record: dict) -> None:
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+    emit(f"{record.get('bench', 'bench')}/json", 0.0, path)

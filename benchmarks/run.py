@@ -9,15 +9,28 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_poisson         — Fig. 8: 125-pt Poisson + perf-model decomposition
   bench_roofline_table  — the 40-cell dry-run roofline (reads experiments/)
 
-CLI: ``--only SECTION`` runs one section, ``--tiny`` shrinks problem
-sizes for smoke runs, and ``--json PATH`` makes sections that support it
-(today: kernels) write a machine-readable record — CI runs
-``--only kernels --tiny --json BENCH_kernels.json`` to track the
-iteration-core trajectory across PRs.
+CLI (ReFrame-style harness):
+  --only SECTION        run one section; repeatable (``--only kernels
+                        --only solver_methods``); default is all sections
+  --tiny                shrink problem sizes (CI smoke)
+  --json-dir DIR        sections that support JSON write
+                        ``DIR/BENCH_<section>.json`` records — env-
+                        fingerprinted, gate-able by tools/bench_gate.py
+  --json PATH           legacy single-file form (kernels section only)
+  --obs-dump PATH       run with observability on and write the collected
+                        spans + metrics snapshot as one JSON artifact
+
+CI runs ``--tiny --json-dir bench_out --only kernels --only
+solver_methods --obs-dump bench_out/obs_dump.json`` then gates
+``bench_out`` against the committed ``benchmarks/trajectory/`` with
+``tools/bench_gate.py`` — a "faster" claim that regresses the trajectory
+beyond the noise band fails the build.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import traceback
 
@@ -34,29 +47,45 @@ def main(argv=None) -> None:
 
     sections = [
         ("convergence", bench_convergence.main, {}),
-        ("solver_methods", bench_solver_methods.main, {}),
+        ("solver_methods", bench_solver_methods.main, {"json_path": True, "tiny": True}),
         ("kernels", bench_kernels.main, {"json_path": True, "tiny": True}),
         ("overlap", bench_overlap.main, {}),
         ("poisson", bench_poisson.main, {}),
         ("roofline_table", bench_roofline_table.main, {}),
     ]
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--only", choices=[s[0] for s in sections], default=None,
-                    help="run a single section")
+    ap.add_argument("--only", choices=[s[0] for s in sections], action="append",
+                    default=None, help="run a single section (repeatable)")
     ap.add_argument("--tiny", action="store_true",
                     help="shrink problem sizes (CI smoke)")
     ap.add_argument("--json", metavar="PATH", default=None,
-                    help="write a JSON record for sections that support it")
+                    help="legacy: single JSON record path (kernels section)")
+    ap.add_argument("--json-dir", metavar="DIR", default=None,
+                    help="write BENCH_<section>.json per JSON-capable section")
+    ap.add_argument("--obs-dump", metavar="PATH", default=None,
+                    help="enable observability; dump spans+metrics JSON here")
     args = ap.parse_args(argv)
+
+    if args.obs_dump:
+        from repro.obs import clear_spans, enable, reset_metrics
+
+        enable()
+        clear_spans()
+        reset_metrics()
+    if args.json_dir:
+        os.makedirs(args.json_dir, exist_ok=True)
 
     print("name,us_per_call,derived")
     failed = []
     for name, fn, accepts in sections:
-        if args.only is not None and name != args.only:
+        if args.only is not None and name not in args.only:
             continue
         kwargs = {}
-        if accepts.get("json_path") and args.json:
-            kwargs["json_path"] = args.json
+        if accepts.get("json_path"):
+            if args.json_dir:
+                kwargs["json_path"] = os.path.join(args.json_dir, f"BENCH_{name}.json")
+            elif args.json and name == "kernels":
+                kwargs["json_path"] = args.json
         if accepts.get("tiny") and args.tiny:
             kwargs["tiny"] = True
         try:
@@ -65,6 +94,14 @@ def main(argv=None) -> None:
             failed.append(name)
             traceback.print_exc()
             print(f"bench/{name}/FAILED,0,", flush=True)
+
+    if args.obs_dump:
+        from repro.obs import snapshot, spans_to_dicts
+
+        with open(args.obs_dump, "w") as f:
+            json.dump({"metrics": snapshot(), "spans": spans_to_dicts()}, f, indent=2)
+        print(f"bench/obs_dump,0.0,{args.obs_dump}", flush=True)
+
     if failed:
         sys.exit(1)
 

@@ -12,11 +12,17 @@ many times. ``repro.plan`` is that split made explicit:
 from a keyed cache under the hood), and matrix-free operators plug into
 the same plans via ``FunctionOperator``.
 
+Observability rides along (``repro.obs``): enable it and every solve is
+timed, span-annotated and summarized into ``plan.last_report`` — the
+convergence curve, launches/iteration and achieved-bandwidth numbers
+that make a "faster" claim checkable.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax.numpy as jnp
 
 import repro
+from repro.obs import convergence_curve
 from repro.sparse import FunctionOperator, poisson27, spmv
 
 
@@ -37,6 +43,9 @@ def main():
         f"solve:   iters={int(res.iterations):3d}  |x-x*|="
         f"{float(jnp.linalg.norm(res.x - xstar)):.2e}  traces={p.trace_count}"
     )
+    # the NaN-padded history, trimmed to the real curve (iters+1 points)
+    curve = convergence_curve(res)
+    print(f"curve:   {curve[0]:.2e} -> {curve[-1]:.2e} in {len(curve) - 1} steps")
     B = jnp.stack([b, 2.0 * b, -0.5 * b, b + 1e-3])
     batch = p.solve_batched(B)  # ONE vmapped XLA program for all four
     print(
@@ -65,6 +74,13 @@ def main():
             f"|u|={float(r.residual_norm):.2e}  converged={bool(r.converged)}"
         )
     print("plan cache after the loop:", repro.plan_cache_stats())
+
+    # --- observability: the same solves, now with evidence attached ---
+    repro.obs.enable()
+    res = p.solve(b)   # warm plan: steady-state timing
+    print()
+    print(p.last_report.summary())
+    repro.obs.disable()
 
 
 if __name__ == "__main__":

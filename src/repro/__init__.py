@@ -26,6 +26,11 @@ _API = (
 
 def __getattr__(name):
     # Lazy so `import repro` stays free of jax import cost/side effects.
+    if name == "obs":
+        # the telemetry subsystem (spans/metrics/reports); jax-free import
+        import importlib
+
+        return importlib.import_module(".obs", __name__)
     if name == "plan":
         # the submodule doubles as the entry point: it is callable
         # (plan.__call__ == the plan() factory) and carries SolverPlan etc.
@@ -41,4 +46,4 @@ def __getattr__(name):
 
 
 def __dir__():
-    return sorted(set(globals()) | set(_API))
+    return sorted(set(globals()) | set(_API) | {"obs"})

@@ -38,6 +38,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from ..compat import shard_map
+from ..obs.trace import trace_scope
 from ..sparse.partition import ShardedDIA
 from .iteration import get_core, run_pipecg
 from .reduce import make_reducer
@@ -237,9 +238,21 @@ def build_distributed_solver(
 
     if cfg.spmv not in _DIST_SPMV:
         raise ValueError(f"method {method!r} names unknown SPMV strategy {cfg.spmv!r}")
-    local_spmv = partial(_DIST_SPMV[cfg.spmv], offsets=offsets, hw=hw, axis=axis, n_shards=Pn)
-    reducer = make_reducer(cfg.reduce, axis)
+    raw_spmv = partial(_DIST_SPMV[cfg.spmv], offsets=offsets, hw=hw, axis=axis, n_shards=Pn)
+    base_reducer = make_reducer(cfg.reduce, axis)
     core = get_core(engine)
+
+    # phase annotations: the distributed SPMV and the global reduction get
+    # their own HLO names (per strategy), so XLA profiles attribute
+    # collective time to the schedule that caused it. trace_scope adds no
+    # primitives — a no-op unless repro.obs is enabled at trace time.
+    def local_spmv(data, v, rows):
+        with trace_scope(f"dist.spmv.{cfg.spmv}"):
+            return raw_spmv(data, v, rows)
+
+    def reducer(*partials):
+        with trace_scope(f"dist.reduce.{cfg.reduce}"):
+            return base_reducer(*partials)
 
     spec_mat = P(axis, None, None)
     spec_vec = P(axis, None)

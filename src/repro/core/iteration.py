@@ -56,6 +56,7 @@ from typing import Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..obs.trace import trace_scope
 from .reduce import Reducer, make_reducer
 
 __all__ = [
@@ -265,15 +266,17 @@ def run_pipecg(
     fused_spmv = bool(getattr(core, "fuses_spmv", False))
     dtype = b.dtype
 
-    # init (Alg. 2 lines 1-3)
-    r0 = b - spmv_fn(x0)
-    u0 = pc_fn(r0)
-    w0 = spmv_fn(u0)
-    gamma0, delta0, nn0 = reducer(dot_f32(r0, u0), dot_f32(w0, u0), dot_f32(u0, u0))
-    norm0 = jnp.sqrt(nn0)
-    m0 = pc_fn(w0)
-    # a fused core computes n = A m itself; carry a width-0 placeholder
-    n0 = jnp.zeros((0,), dtype) if fused_spmv else spmv_fn(m0)
+    # init (Alg. 2 lines 1-3) — trace_scope tags HLO names only (zero
+    # primitives added; a no-op context unless repro.obs is enabled)
+    with trace_scope("pipecg.init"):
+        r0 = b - spmv_fn(x0)
+        u0 = pc_fn(r0)
+        w0 = spmv_fn(u0)
+        gamma0, delta0, nn0 = reducer(dot_f32(r0, u0), dot_f32(w0, u0), dot_f32(u0, u0))
+        norm0 = jnp.sqrt(nn0)
+        m0 = pc_fn(w0)
+        # a fused core computes n = A m itself; carry a width-0 placeholder
+        n0 = jnp.zeros((0,), dtype) if fused_spmv else spmv_fn(m0)
     thresh = jnp.maximum(jnp.asarray(atol, norm0.dtype), jnp.asarray(rtol, norm0.dtype) * norm0)
     hist0 = jnp.full((maxiter + 1,), jnp.nan, jnp.float32).at[0].set(norm0.astype(jnp.float32))
     zv = jnp.zeros_like(b)
@@ -292,21 +295,24 @@ def run_pipecg(
             i > 0, gamma / (delta - beta * gamma / alpha_prev), gamma / delta
         )
         # the one canonical core (lines 10-21; +22 when the core fuses it)
-        if fused_spmv:
-            z, q, s, p, x, r, u, w, m, (g_p, d_p, n_p) = core(
-                z, q, s, p, x, r, u, w, m, inv_diag, alpha.astype(dtype), beta.astype(dtype)
-            )
-        else:
-            z, q, s, p, x, r, u, w, m, (g_p, d_p, n_p) = core(
-                z, q, s, p, x, r, u, w, n, m, inv_diag, alpha.astype(dtype), beta.astype(dtype)
-            )
-            if inv_diag is None:
-                m = pc_fn(w)  # general (non-fused) preconditioner
+        with trace_scope("pipecg.iteration.core"):
+            if fused_spmv:
+                z, q, s, p, x, r, u, w, m, (g_p, d_p, n_p) = core(
+                    z, q, s, p, x, r, u, w, m, inv_diag, alpha.astype(dtype), beta.astype(dtype)
+                )
+            else:
+                z, q, s, p, x, r, u, w, m, (g_p, d_p, n_p) = core(
+                    z, q, s, p, x, r, u, w, n, m, inv_diag, alpha.astype(dtype), beta.astype(dtype)
+                )
+                if inv_diag is None:
+                    m = pc_fn(w)  # general (non-fused) preconditioner
         # the reduction(s): results consumed next iteration only
-        gamma_new, delta_new, uu = reducer(g_p, d_p, n_p)
+        with trace_scope("pipecg.iteration.reduce"):
+            gamma_new, delta_new, uu = reducer(g_p, d_p, n_p)
         if not fused_spmv:
             # SPMV (line 22) — independent of the reductions: overlap target
-            n = spmv_fn(m)
+            with trace_scope("pipecg.iteration.spmv"):
+                n = spmv_fn(m)
         norm_new = jnp.sqrt(uu)
 
         if replace_every > 0:
@@ -314,6 +320,10 @@ def run_pipecg(
             # every auxiliary vector from its definition to arrest the
             # recurrence roundoff drift that plain PIPECG accumulates.
             def _replace(args):
+                with trace_scope("pipecg.residual_replacement"):
+                    return _replace_body(args)
+
+            def _replace_body(args):
                 x, p, *_ = args
                 r = b - replace_spmv_fn(x)
                 u = pc_fn(r)

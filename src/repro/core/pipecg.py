@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels.common import LANE, ceil_to, pad1d
+from ..obs.trace import trace_scope
 from ..sparse.formats import DIAMatrix
 from ..sparse.spmv import resolve_engine, spmv, spmv_dia, spmv_dia_bf16
 from .iteration import get_core, make_fused_iter_core, resolve_core_name, run_pipecg
@@ -127,12 +128,13 @@ def _pipecg_impl(
         core = get_core(core_name)
         t = _padded_tile(core_name, A.bandwidth, tile)
         n_pad = ceil_to(n, t)
-    Ap = DIAMatrix(jnp.pad(A.data, ((0, 0), (0, n_pad - n))), A.offsets, n_pad)
-    bp = pad1d(b, n_pad)
-    x0p = pad1d(x0, n_pad)
-    inv_p = pad1d(inv_diag, n_pad) if inv_diag is not None else None
-    if core_name == "fused_iter" and inv_p is None:
-        inv_p = jnp.ones((n_pad,), b.dtype)  # identity PC, fused elementwise
+    with trace_scope("pipecg.pad"):  # once per solve, never in the loop
+        Ap = DIAMatrix(jnp.pad(A.data, ((0, 0), (0, n_pad - n))), A.offsets, n_pad)
+        bp = pad1d(b, n_pad)
+        x0p = pad1d(x0, n_pad)
+        inv_p = pad1d(inv_diag, n_pad) if inv_diag is not None else None
+        if core_name == "fused_iter" and inv_p is None:
+            inv_p = jnp.ones((n_pad,), b.dtype)  # identity PC, fused elementwise
     spmv_fn, replace_fn = _padded_spmv_fns(Ap, spmv_engine, t)
 
     i, x, norm, converged, hist = run_pipecg(

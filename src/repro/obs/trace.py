@@ -1,0 +1,184 @@
+"""Host-side spans + trace-time annotations for the solver stack.
+
+Two complementary instruments, both strict no-ops until ``enable()``:
+
+* :func:`span` — a host-side timed span. Spans nest into a tree (plan
+  build > preconditioner resolve > core pinning; solve > execution) and
+  each span also opens a ``jax.profiler.TraceAnnotation`` so the same
+  region shows up in XLA/perfetto profiles under the same name.
+* :func:`trace_scope` — a *trace-time* annotation for code that runs
+  under ``jit``/``shard_map``. It wraps ``jax.named_scope``, which tags
+  the emitted HLO name stack and **adds zero primitives** to the jaxpr —
+  the solver while-loop body is byte-identical with observability on or
+  off (asserted in tests via the jaxpr census).
+
+Host spans measure wall time with ``time.perf_counter`` around *host*
+work (trace, dispatch); JAX dispatch is async, so a span around a solve
+measures end-to-end only if the caller synchronizes — ``SolverPlan.solve``
+does exactly that when observability is enabled (and not otherwise, so
+the disabled path keeps async dispatch).
+
+State is process-local and thread-safe: each thread keeps its own open
+span stack; finished root spans accumulate in one shared list read by
+``span_tree()`` / ``dump_spans()``.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+__all__ = [
+    "enable",
+    "disable",
+    "enabled",
+    "span",
+    "trace_scope",
+    "Span",
+    "span_tree",
+    "clear_spans",
+    "spans_to_dicts",
+    "dump_spans",
+]
+
+_ENABLED = False
+_LOCK = threading.Lock()
+_ROOTS: List["Span"] = []
+_TLS = threading.local()
+
+
+def enable() -> None:
+    """Turn observability on process-wide (spans record, metrics count)."""
+    global _ENABLED
+    _ENABLED = True
+
+
+def disable() -> None:
+    """Turn observability off; instruments revert to no-ops."""
+    global _ENABLED
+    _ENABLED = False
+
+
+def enabled() -> bool:
+    return _ENABLED
+
+
+@dataclass
+class Span:
+    """One timed region; children are spans opened while it was open."""
+
+    name: str
+    attrs: Dict[str, Any] = field(default_factory=dict)
+    t_start: float = 0.0
+    t_end: float = 0.0
+    children: List["Span"] = field(default_factory=list)
+
+    @property
+    def duration_s(self) -> float:
+        return max(self.t_end - self.t_start, 0.0)
+
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "duration_s": self.duration_s,
+            "attrs": dict(self.attrs),
+            "children": [c.to_dict() for c in self.children],
+        }
+
+    def find(self, name: str) -> Optional["Span"]:
+        """First descendant (or self) with this name, depth-first."""
+        if self.name == name:
+            return self
+        for c in self.children:
+            hit = c.find(name)
+            if hit is not None:
+                return hit
+        return None
+
+
+def _stack() -> List[Span]:
+    st = getattr(_TLS, "stack", None)
+    if st is None:
+        st = _TLS.stack = []
+    return st
+
+
+@contextlib.contextmanager
+def span(name: str, **attrs):
+    """Open a named host span (and an XLA TraceAnnotation) around a block.
+
+    Yields the :class:`Span` (or None when disabled) so callers can attach
+    attributes discovered mid-block: ``sp and sp.attrs.update(...)``.
+    """
+    if not _ENABLED:
+        yield None
+        return
+    sp = Span(name=name, attrs=dict(attrs))
+    st = _stack()
+    st.append(sp)
+    ann = _trace_annotation(name)
+    sp.t_start = time.perf_counter()
+    try:
+        with ann:
+            yield sp
+    finally:
+        sp.t_end = time.perf_counter()
+        st.pop()
+        if st:
+            st[-1].children.append(sp)
+        else:
+            with _LOCK:
+                _ROOTS.append(sp)
+
+
+def _trace_annotation(name: str):
+    # lazy + defensive: profiler availability varies across backends and
+    # headless builds; host spans must never fail because of it
+    try:
+        from jax.profiler import TraceAnnotation
+
+        return TraceAnnotation(name)
+    except Exception:
+        return contextlib.nullcontext()
+
+
+def trace_scope(name: str):
+    """``jax.named_scope(name)`` when enabled, nullcontext otherwise.
+
+    Safe inside jitted/shard_mapped code: named_scope annotates the HLO
+    name stack at trace time and emits no primitives, so the compiled
+    program is identical either way — it just becomes *legible* in
+    profiles (iteration / reduce / spmv phases get their own names).
+    """
+    if not _ENABLED:
+        return contextlib.nullcontext()
+    try:
+        import jax
+
+        return jax.named_scope(name)
+    except Exception:
+        return contextlib.nullcontext()
+
+
+def span_tree() -> Tuple[Span, ...]:
+    """All finished root spans, oldest first."""
+    with _LOCK:
+        return tuple(_ROOTS)
+
+
+def clear_spans() -> None:
+    with _LOCK:
+        _ROOTS.clear()
+
+
+def spans_to_dicts() -> List[dict]:
+    return [s.to_dict() for s in span_tree()]
+
+
+def dump_spans(path: str) -> None:
+    """Write the span tree as JSON (one object, ``{"spans": [...]}``)."""
+    with open(path, "w") as f:
+        json.dump({"spans": spans_to_dicts()}, f, indent=2)

@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import inspect
 import sys as _sys
+import time
 from collections import OrderedDict
 from typing import Callable, Dict, Optional, Tuple
 
@@ -45,6 +46,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .obs import metrics as _metrics
+from .obs.trace import enabled as _obs_enabled, span as _span, trace_scope as _trace_scope
 from .core import chronopoulos_cg, identity, jacobi, pcg, pipecg
 from .core.distributed import (
     build_distributed_solver,
@@ -157,7 +160,6 @@ class SolverPlan:
         self.A = A
         self.method = method
         self.engine = engine
-        self.M = _resolve_pc(M, A)
         self.atol = float(atol)
         self.rtol = float(rtol)
         self.maxiter = int(maxiter)
@@ -167,11 +169,18 @@ class SolverPlan:
         self._run = None
         self._run_batched = None
         self._run_x0 = None
+        self.last_report = None       # SolveReport of the latest solve (obs on)
+        self._census_launches = None  # cached launches/iter census (obs on)
 
-        if distributed:
-            self._setup_distributed(kwargs)
-        else:
-            self._setup_single(kwargs)
+        with _span("plan.build", method=method, engine=engine, n=self.n,
+                   distributed=distributed):
+            with _span("plan.resolve_pc"):
+                self.M = _resolve_pc(M, A)
+            if distributed:
+                self._setup_distributed(kwargs)
+            else:
+                self._setup_single(kwargs)
+        _metrics.counter("plan.builds").inc()
 
     # -- setup ------------------------------------------------------------
 
@@ -195,20 +204,23 @@ class SolverPlan:
             # repeated solves reuse the exact same kernel closure
             from .core.pipecg import pin_pipecg_core
 
-            core = pin_pipecg_core(
-                A, M, engine,
-                spmv_engine=call_kwargs.get("spmv_engine"),
-                replace_every=call_kwargs.get("replace_every"),
-                tile=call_kwargs.get("tile"),
-            )
+            with _span("plan.pin_core"):
+                core = pin_pipecg_core(
+                    A, M, engine,
+                    spmv_engine=call_kwargs.get("spmv_engine"),
+                    replace_every=call_kwargs.get("replace_every"),
+                    tile=call_kwargs.get("tile"),
+                )
             if core is not None:
                 call_kwargs["core"] = core
         self._core = call_kwargs.get("core")
 
         def _inner(b, x0, atol, rtol):
             self._traces += 1  # runs at trace time only
-            return fn(A, b, M=M, x0=x0, atol=atol, rtol=rtol,
-                      maxiter=maxiter, engine=engine, **call_kwargs)
+            _metrics.counter("plan.traces").inc()
+            with _trace_scope(f"solve.{self.method}"):
+                return fn(A, b, M=M, x0=x0, atol=atol, rtol=rtol,
+                          maxiter=maxiter, engine=engine, **call_kwargs)
 
         self._inner = _inner
         self._run = jax.jit(_inner)
@@ -245,21 +257,24 @@ class SolverPlan:
                 f"distributed solve supports Jacobi/identity PCs, got {type(self.M).__name__}"
             )
         # ---- the paid-once setup: decomposition, mesh, operator handle ----
-        if weights is not None or partition == "nnz":
-            bounds = decompose(A, shards, weights=None if weights is None else np.asarray(weights))
-        else:
-            bounds = balanced_rows(A.n, shards)
+        with _span("plan.decompose", shards=int(shards), partition=partition):
+            if weights is not None or partition == "nnz":
+                bounds = decompose(A, shards, weights=None if weights is None else np.asarray(weights))
+            else:
+                bounds = balanced_rows(A.n, shards)
         self.dist_method = dist_method
         self.shards = int(shards)
         self.bounds = tuple(int(x) for x in np.asarray(bounds))
-        self.mesh = mesh if mesh is not None else make_solver_mesh(shards)
-        self.sharded = shard_dia(A, bounds)  # the reusable operator handle
+        with _span("plan.shard"):
+            self.mesh = mesh if mesh is not None else make_solver_mesh(shards)
+            self.sharded = shard_dia(A, bounds)  # the reusable operator handle
         self.kwargs = {"dist_method": dist_method, "shards": self.shards,
                        "partition": partition}
-        runner = build_distributed_solver(
-            self.sharded, mesh=self.mesh, method=dist_method,
-            engine=self.engine, maxiter=self.maxiter,
-        )
+        with _span("plan.build_solver", dist_method=dist_method):
+            runner = build_distributed_solver(
+                self.sharded, mesh=self.mesh, method=dist_method,
+                engine=self.engine, maxiter=self.maxiter,
+            )
         inv_sh = shard_vector(inv_diag, bounds)
         bounds_arr = self.bounds
 
@@ -273,12 +288,14 @@ class SolverPlan:
 
         def _inner0(b, atol, rtol):
             self._traces += 1
+            _metrics.counter("plan.traces").inc()
             return _solve_rhs(b, atol, rtol)
 
         def _inner_x0(b, x0, atol, rtol):
             # nonzero warm start: solve the shifted system A d = b - A x0,
             # then x = x0 + d (no host sync, no x0==0 guard needed)
             self._traces += 1
+            _metrics.counter("plan.traces").inc()
             res = _solve_rhs(b - spmv(A, x0), atol, rtol)
             return SolveResult(
                 x=x0 + res.x, iterations=res.iterations,
@@ -302,14 +319,7 @@ class SolverPlan:
             jnp.float32(self.rtol if rtol is None else rtol),
         )
 
-    def solve(self, b, x0=None, atol: float | None = None, rtol: float | None = None) -> SolveResult:
-        """Solve ``A x = b`` with this plan's pinned program.
-
-        ``x0``/``atol``/``rtol`` are per-call and traced — varying them
-        between calls does not retrace (``x0=None`` and ``x0=array`` are
-        two distinct programs; steady state is still one trace each).
-        """
-        atol, rtol = self._tols(atol, rtol)
+    def _execute(self, b, x0, atol, rtol) -> SolveResult:
         if self.distributed:
             if x0 is None:
                 return self._run(b, atol, rtol)
@@ -318,6 +328,60 @@ class SolverPlan:
             x0 = jnp.zeros_like(b)
         return self._run(b, x0, atol, rtol)
 
+    def solve(self, b, x0=None, atol: float | None = None, rtol: float | None = None) -> SolveResult:
+        """Solve ``A x = b`` with this plan's pinned program.
+
+        ``x0``/``atol``/``rtol`` are per-call and traced — varying them
+        between calls does not retrace (``x0=None`` and ``x0=array`` are
+        two distinct programs; steady state is still one trace each).
+
+        With observability enabled (``repro.obs.enable()``) the solve is
+        synchronized and timed, solve metrics are recorded, and a full
+        :class:`~repro.obs.SolveReport` lands on ``self.last_report``.
+        The disabled path is untouched: async dispatch, zero extra work,
+        and a solve-loop jaxpr byte-identical to the uninstrumented one.
+        """
+        atol, rtol = self._tols(atol, rtol)
+        if not _obs_enabled():
+            return self._execute(b, x0, atol, rtol)
+        traces_before = self._traces
+        with _span("plan.solve", method=self.method, n=self.n) as sp:
+            t0 = time.perf_counter()
+            res = self._execute(b, x0, atol, rtol)
+            jax.block_until_ready(res)
+            elapsed = time.perf_counter() - t0
+        self._record_solve(res, elapsed, b, sp, cold=self._traces > traces_before)
+        return res
+
+    def _record_solve(self, res: SolveResult, elapsed: float, b, sp, *, cold: bool) -> None:
+        """Obs-enabled bookkeeping: metrics + SolveReport (host side only)."""
+        from .obs.report import plan_launches_per_iteration, solve_report
+
+        if self._census_launches is None:
+            # trace-only census, cached per plan: kernel launches per
+            # iteration of the pinned loop (the fusion trajectory metric)
+            self._census_launches = plan_launches_per_iteration(self, b)
+        report = solve_report(
+            self, res, elapsed_s=elapsed, launches=self._census_launches, cold_start=cold
+        )
+        self.last_report = report
+        if sp is not None:
+            sp.attrs.update(iterations=report.iterations, time_s=elapsed,
+                            converged=report.converged, cold_start=cold)
+        _metrics.counter("plan.solves").inc()
+        if cold:
+            # first solve through a fresh program: wall time is trace +
+            # compile + solve; keep it out of the steady-state histogram
+            _metrics.counter("plan.cold_solves").inc()
+            _metrics.histogram("plan.cold_solve_time_s").record(elapsed)
+        else:
+            _metrics.histogram("plan.solve_time_s").record(elapsed)
+        _metrics.histogram("plan.solve_iterations").record(report.iterations)
+        if not report.converged:
+            _metrics.counter("plan.solves_unconverged").inc()
+        if report.rr_events:
+            _metrics.counter("plan.rr_events").inc(report.rr_events)
+
     def solve_batched(self, B, x0=None, atol: float | None = None, rtol: float | None = None) -> SolveResult:
         """Solve a batch of rhs, shape (k, n) -> SolveResult with leading k.
 
@@ -325,8 +389,40 @@ class SolverPlan:
         results are exact; wall-clock is set by the slowest rhs).
         Distributed methods run sequentially per rhs — shard_map does not
         nest under vmap — but still reuse this plan's pinned program and
-        operator handle.
+        operator handle. With observability enabled the batch is
+        synchronized/timed and batch metrics are recorded.
         """
+        if not _obs_enabled():
+            return self._execute_batched(B, x0, atol, rtol)
+        traces_before = self._traces
+        with _span("plan.solve_batched", k=int(B.shape[0]), n=self.n) as sp:
+            t0 = time.perf_counter()
+            res = self._execute_batched(B, x0, atol, rtol)
+            jax.block_until_ready(res)
+            elapsed = time.perf_counter() - t0
+        from .obs.report import iterations_from_history, plan_launches_per_iteration, solve_report
+
+        cold = self._traces > traces_before
+        iters = iterations_from_history(res.history)
+        if self._census_launches is None and B.shape[0]:
+            self._census_launches = plan_launches_per_iteration(self, B[0])
+        self.last_report = solve_report(
+            self, res, elapsed_s=elapsed, launches=self._census_launches, cold_start=cold
+        )
+        if sp is not None:
+            sp.attrs.update(time_s=elapsed, cold_start=cold,
+                            iterations_max=int(np.max(iters)) if len(iters) else 0)
+        _metrics.counter("plan.batched_solves").inc()
+        _metrics.counter("plan.batched_rhs").inc(int(B.shape[0]))
+        _metrics.histogram("plan.batch_size").record(int(B.shape[0]))
+        _metrics.histogram(
+            "plan.cold_solve_time_s" if cold else "plan.solve_time_s"
+        ).record(elapsed)
+        for it in np.asarray(iters).ravel():
+            _metrics.histogram("plan.solve_iterations").record(int(it))
+        return res
+
+    def _execute_batched(self, B, x0, atol, rtol) -> SolveResult:
         if self.distributed:
             xs = [None] * B.shape[0] if x0 is None else list(x0)
             results = [self.solve(b, x0=x, atol=atol, rtol=rtol) for b, x in zip(B, xs)]
@@ -448,15 +544,19 @@ def get_plan(A, *, method="pipecg", engine="auto", M="jacobi",
         if cached is not None and cached.A is A:
             _PLAN_CACHE.move_to_end(key)
             _CACHE_STATS["hits"] += 1
+            _metrics.counter("plan_cache.hits").inc()
             return cached
         _CACHE_STATS["misses"] += 1
+        _metrics.counter("plan_cache.misses").inc()
     else:
         _CACHE_STATS["uncachable"] += 1
+        _metrics.counter("plan_cache.uncachable").inc()
     p = plan(A, method=method, engine=engine, M=M, maxiter=maxiter, **kwargs)
     if key is not None:
         _PLAN_CACHE[key] = p
         while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
             _PLAN_CACHE.popitem(last=False)
+        _metrics.gauge("plan_cache.size").set(len(_PLAN_CACHE))
     return p
 
 

@@ -15,6 +15,7 @@ bucket) no matter the arrival pattern.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Optional
 
@@ -22,6 +23,8 @@ import jax
 import jax.numpy as jnp
 
 from ..models.zoo import ModelApi
+from ..obs import metrics as _metrics
+from ..obs.trace import enabled as _obs_enabled, span as _span
 
 __all__ = ["ServeConfig", "SolverEngine", "generate", "make_decode_step"]
 
@@ -169,25 +172,75 @@ class SolverEngine:
 
     def solve(self, b: jax.Array):
         """Solve for a single rhs ``b`` of shape (n,)."""
-        return self.plan.solve(b)
+        _metrics.counter("serve.requests").inc()
+        with _span("serve.solve", n=b.shape[0]):
+            return self.plan.solve(b)
 
     def solve_batch(self, bs: jax.Array):
         """Solve a batch of rhs, shape (k, n) -> SolveResult with leading k.
 
-        Per-lane results are exact (vmap's while_loop rule freezes a lane's
-        state once its own convergence test fires, so iterations/history are
-        per-rhs), but wall-clock is set by the slowest rhs in the bucket —
-        group rhs of similar difficulty when latency matters.
+        Wall-clock for a bucket is set by its slowest rhs, so the batch
+        runs to the shared worst-case stop; the returned ``iterations``
+        are nevertheless honest *per-rhs* counts, derived from the first
+        NaN-tail index of each ``history`` row (today that agrees with
+        vmap's per-lane freeze; the derivation stays correct under
+        execution strategies with no such freeze, e.g. mesh-level rhs
+        stacking). Group rhs of similar difficulty when latency matters —
+        the ``serve.*`` batch-occupancy/waste metrics quantify the cost
+        of not doing so.
         """
+        k = bs.shape[0]
+        _metrics.counter("serve.requests").inc(k)
+        with _span("serve.solve_batch", k=k):
+            out = self._solve_batch_impl(bs)
+        return self._with_per_rhs_iterations(out)
+
+    def _solve_batch_impl(self, bs: jax.Array):
         if self.max_batch is None or self.plan.distributed or bs.shape[0] == 0:
             return self.plan.solve_batched(bs)
         k = bs.shape[0]
         chunks = []
         for lo in range(0, k, self.max_batch):
             chunk = bs[lo : lo + self.max_batch]
-            pad = self.max_batch - chunk.shape[0]
+            valid = chunk.shape[0]
+            pad = self.max_batch - valid
             if pad:  # coalesce the remainder into the SAME compiled bucket
                 chunk = jnp.concatenate([chunk, jnp.zeros((pad, bs.shape[1]), bs.dtype)])
+            _metrics.counter("serve.buckets").inc()
+            _metrics.counter("serve.padded_lanes").inc(pad)
+            _metrics.histogram("serve.batch_occupancy").record(valid / self.max_batch)
             chunks.append(self.plan.solve_batched(chunk))
         out = jax.tree_util.tree_map(lambda *xs: jnp.concatenate(xs), *chunks)
         return jax.tree_util.tree_map(lambda x: x[:k], out)
+
+    def _with_per_rhs_iterations(self, out):
+        """Replace ``iterations`` with per-rhs counts from the NaN tails.
+
+        Computed lazily in jnp (no host sync on the serving path). With
+        observability on, also records the per-rhs iteration spread and
+        the lane-iterations wasted by the shared worst-case stop.
+        """
+        hist = out.history
+        if hist.ndim < 2 or hist.shape[0] == 0:
+            return out
+        per_rhs = jnp.maximum(jnp.sum(~jnp.isnan(hist), axis=-1) - 1, 0).astype(jnp.int32)
+        out = dataclasses.replace(out, iterations=per_rhs)
+        if _obs_enabled():
+            import numpy as np
+
+            iters = np.asarray(per_rhs)
+            for it in iters:
+                _metrics.histogram("serve.rhs_iterations").record(int(it))
+            # lanes ride until the slowest rhs of their OWN bucket stops:
+            # the difference is pure occupancy waste, the number bucket
+            # routing should shrink. Bucketing mirrors _solve_batch_impl;
+            # distributed batches run per-rhs (no shared stop, no waste).
+            if not self.plan.distributed:
+                step = self.max_batch or len(iters)
+                waste = sum(
+                    int((grp.max() - grp).sum())
+                    for lo in range(0, len(iters), step)
+                    if len(grp := iters[lo : lo + step])
+                )
+                _metrics.counter("serve.wasted_lane_iterations").inc(waste)
+        return out

@@ -1,0 +1,208 @@
+#!/usr/bin/env python
+"""Perf-regression gate: compare BENCH_*.json records against a committed
+trajectory and fail when a metric regresses beyond its noise band.
+
+Makes every "faster" claim checkable: CI runs ``benchmarks.run --tiny
+--json-dir bench_out``, then
+
+    python tools/bench_gate.py --baseline benchmarks/trajectory --current bench_out
+
+Records are compared file-by-file (matching ``BENCH_<topic>.json``
+names), flattened to dotted keys (``cores.fused_iter.launches_per_iter``)
+so nesting depth never matters to the rules:
+
+* **Structural metrics** (``launches_per_iter``, ``bytes_per_elem``) are
+  properties of the program's construction, noise-free by definition:
+  any increase over baseline fails. No env check needed — a census does
+  not depend on the machine.
+* **Convergence metrics** (``iters_*``, ``iterations``) get a small band
+  (default 10%): the math should not drift, but atol-edge flakiness on a
+  different BLAS is not a regression.
+* **Timing metrics** (``us_per_*``, ``*_gbs``, ``*_time_*``) are only
+  compared when the two records' env fingerprints are comparable
+  (backend, device_kind, x64 — ``repro.obs.comparable_env``); CI shares
+  one runner class so they usually are. The default band is wide (4x)
+  because ``--tiny`` problems are microseconds-scale and shared/loaded
+  runners routinely swing 3-4x (measured: a concurrent test suite on
+  this repo's dev box slowed the tiny benches ~4x) — the gate exists to
+  catch order-of-magnitude regressions (a fused kernel silently falling
+  back to the unfused path), not 5% jitter. Tighten with
+  ``--time-band`` on quiet dedicated hardware.
+* A key present in baseline but **missing from current** fails: a
+  benchmark silently dropping a column is exactly the kind of coverage
+  rot a gate exists to catch. Keys new in current are reported, not
+  failed (trajectory grows; ``--update`` refreshes the baseline).
+
+Exit status: 0 = within bands, 1 = regression (or missing
+baseline/current files), plus a per-key report either way.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import shutil
+import sys
+from typing import Dict, Tuple
+
+# metric classification by key leaf (last dotted component)
+STRUCTURAL = ("launches_per_iter", "bytes_per_elem")
+CONVERGENCE_PREFIXES = ("iters_", "iterations")
+TIMING_MARKERS = ("us_per_", "_gbs", "time_", "_us")
+# provenance/config keys: informational, never gated
+SKIP_LEAVES = {"schema", "bench", "backend", "interpret_kernels", "n", "n_diags",
+               "maxiter", "iters_per_solve", "tiny", "nnz_per_row", "hbm_peak_gbs",
+               "frac_of_hbm_peak", "trace_count"}
+
+
+def _flatten(obj, prefix: str = "") -> Dict[str, object]:
+    out: Dict[str, object] = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            key = f"{prefix}.{k}" if prefix else str(k)
+            out.update(_flatten(v, key))
+    else:
+        out[prefix] = obj
+    return out
+
+
+def comparable_env(a: dict, b: dict) -> bool:
+    """Mirror of repro.obs.comparable_env — kept importless so the gate
+    runs standalone (no PYTHONPATH, no jax) on any CI runner."""
+    return all(a.get(k) == b.get(k) for k in ("backend", "device_kind", "x64"))
+
+
+def classify(key: str) -> str:
+    leaf = key.rsplit(".", 1)[-1]
+    if leaf in SKIP_LEAVES or key.startswith("env."):
+        return "skip"
+    if leaf in STRUCTURAL:
+        return "structural"
+    if any(leaf.startswith(p) or leaf == p for p in CONVERGENCE_PREFIXES):
+        return "convergence"
+    if any(m in leaf for m in TIMING_MARKERS):
+        return "timing"
+    return "skip"
+
+
+def gate_record(base: dict, cur: dict, *, time_band: float, conv_band: float,
+                name: str) -> Tuple[list, list]:
+    """Returns (failures, notes) as lists of strings."""
+    failures, notes = [], []
+    fb, fc = _flatten(base), _flatten(cur)
+    envs_ok = comparable_env(base.get("env", {}), cur.get("env", {}))
+    if not envs_ok:
+        notes.append(f"{name}: env fingerprints differ — timing metrics skipped")
+
+    for key, bval in sorted(fb.items()):
+        kind = classify(key)
+        if kind == "skip":
+            continue
+        if key not in fc:
+            failures.append(f"{name}:{key} present in baseline, MISSING in current")
+            continue
+        cval = fc[key]
+        if bval is None or cval is None:
+            if bval is not None and cval is None:
+                failures.append(f"{name}:{key} was {bval}, now None")
+            continue
+        b, c = float(bval), float(cval)
+        if kind == "structural":
+            if c > b:
+                failures.append(
+                    f"{name}:{key} structural regression: {b:g} -> {c:g} "
+                    "(launches/traffic are noise-free; any increase fails)"
+                )
+        elif kind == "convergence":
+            if c > b * (1.0 + conv_band):
+                failures.append(
+                    f"{name}:{key} convergence regression: {b:g} -> {c:g} "
+                    f"(band {conv_band:.0%})"
+                )
+        elif kind == "timing":
+            if not envs_ok:
+                continue
+            # "bigger is worse" for times, "smaller is worse" for GB/s
+            if "_gbs" in key.rsplit(".", 1)[-1]:
+                if c < b / time_band:
+                    failures.append(
+                        f"{name}:{key} bandwidth regression: {b:.3g} -> {c:.3g} GB/s "
+                        f"(band {time_band:g}x)"
+                    )
+            elif c > b * time_band:
+                failures.append(
+                    f"{name}:{key} timing regression: {b:.3g} -> {c:.3g} "
+                    f"(band {time_band:g}x)"
+                )
+    for key in sorted(set(fc) - set(fb)):
+        if classify(key) != "skip":
+            notes.append(f"{name}:{key} new in current (not in baseline)")
+    return failures, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--baseline", required=True,
+                    help="directory of committed BENCH_*.json trajectory files")
+    ap.add_argument("--current", required=True,
+                    help="directory of freshly produced BENCH_*.json files")
+    ap.add_argument("--time-band", type=float, default=4.0,
+                    help="timing noise band as a ratio (default 4x)")
+    ap.add_argument("--conv-band", type=float, default=0.10,
+                    help="convergence-iterations band as a fraction (default 10%%)")
+    ap.add_argument("--update", action="store_true",
+                    help="copy current records over the baseline instead of gating")
+    args = ap.parse_args(argv)
+
+    base_files = {os.path.basename(p): p
+                  for p in glob.glob(os.path.join(args.baseline, "BENCH_*.json"))}
+    cur_files = {os.path.basename(p): p
+                 for p in glob.glob(os.path.join(args.current, "BENCH_*.json"))}
+
+    if args.update:
+        os.makedirs(args.baseline, exist_ok=True)
+        for name, path in sorted(cur_files.items()):
+            shutil.copy(path, os.path.join(args.baseline, name))
+            print(f"bench_gate: baseline updated <- {name}")
+        return 0
+
+    if not base_files:
+        print(f"bench_gate: no BENCH_*.json under {args.baseline}", file=sys.stderr)
+        return 1
+    if not cur_files:
+        print(f"bench_gate: no BENCH_*.json under {args.current}", file=sys.stderr)
+        return 1
+
+    failures, notes = [], []
+    for name in sorted(base_files):
+        if name not in cur_files:
+            failures.append(f"{name}: baseline record has no current counterpart")
+            continue
+        with open(base_files[name]) as f:
+            base = json.load(f)
+        with open(cur_files[name]) as f:
+            cur = json.load(f)
+        fl, nt = gate_record(base, cur, time_band=args.time_band,
+                             conv_band=args.conv_band, name=name)
+        failures += fl
+        notes += nt
+    for name in sorted(set(cur_files) - set(base_files)):
+        notes.append(f"{name}: new record, no baseline yet (commit it to start gating)")
+
+    for n in notes:
+        print(f"bench_gate: note: {n}")
+    if failures:
+        for f_ in failures:
+            print(f"bench_gate: FAIL: {f_}", file=sys.stderr)
+        print(f"bench_gate: {len(failures)} regression(s) beyond the noise band",
+              file=sys.stderr)
+        return 1
+    print(f"bench_gate: OK — {len(base_files)} record(s) within bands "
+          f"(time {args.time_band:g}x, convergence {args.conv_band:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
