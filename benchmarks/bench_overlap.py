@@ -1,30 +1,43 @@
-"""Hybrid-1 vs Hybrid-2 vs Hybrid-3 — the communication-schedule comparison.
+"""Communication schedules of the distributed methods — h1..h4, pl2, pl3.
 
 The paper's Figures 6-8 compare methods by wall time on a CPU+GPU node; on
 the TPU target the distinguishing quantity is the per-iteration collective
-schedule, which we measure exactly from the lowered shard_map HLO:
+schedule, measured exactly from the while-body jaxpr of each method's
+shard_map program:
 
-  h1: 3 separate scalar psums + full-vector all-gather   (most latency)
-  h2: 1 packed psum + full-vector all-gather             (paper's 3N->N)
-  h3: 1 packed psum + 2x bandwidth-wide halo ppermute    (paper's 2-D)
+  h1 : 3 separate scalar psums + full-vector all-gather   (most latency)
+  h2 : 1 packed psum + full-vector all-gather             (paper's 3N->N)
+  h3 : 1 packed psum + 2x bandwidth-wide halo ppermute    (paper's 2-D)
+  h4 : 2-stage hierarchical psum (intra-pod + inter-pod)  (2-D mesh)
+  pl2: ONE Gram psum per 2 iterations  (depth-2 pipeline)
+  pl3: ONE Gram psum per 3 iterations  (depth-3 pipeline)
 
-Runs in a subprocess with 8 virtual devices (the only place a multi-device
-mesh exists on this CPU box).
+Emits one CSV row per method and (via ``run.py --json-dir``) a
+``BENCH_overlap.json`` record whose ``reductions_per_iter`` /
+``ppermutes_per_iter`` / ``allgathers_per_iter`` leaves are gated as
+STRUCTURAL by tools/bench_gate.py (any increase fails CI) and whose
+``iterations`` leaves get the convergence band — the pl2/pl3
+within-10%-of-pipecg acceptance criterion, enforced against the
+committed trajectory. ``time_per_iter_us`` rides the timing band.
+
+Runs in a subprocess with 8 virtual devices (the only place a
+multi-device mesh exists on this CPU box).
 """
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import sys
 
 _CHILD = r"""
-import os
+import os, time, json
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
-from functools import partial
 from repro.core import jacobi
-from repro.core.distributed import make_solver_mesh, pipecg_distributed
-from repro.launch.roofline import analyze_hlo
+from repro.core.distributed import (make_solver_mesh, build_distributed_solver,
+                                    get_method)
+from repro.kernels.common import while_body_jaxpr, count_primitive
 from repro.sparse import balanced_rows, poisson27, shard_dia, shard_vector, spmv
 
 A = poisson27(12)
@@ -33,29 +46,78 @@ b = spmv(A, xstar)
 M = jacobi(A)
 bounds = balanced_rows(A.n, 8)
 As = shard_dia(A, bounds)
-mesh = make_solver_mesh(8)
+mesh1 = make_solver_mesh(8)
+mesh2 = make_solver_mesh(8, sub=4)
 bsh = shard_vector(b, bounds)
 ish = shard_vector(M.inv_diag, bounds)
 
-for method in ("h1", "h2", "h3"):
-    fn = partial(pipecg_distributed, mesh=mesh, method=method, atol=1e-6, maxiter=64)
-    lowered = jax.jit(lambda a, bb, ii: fn(a, bb, ii)).lower(As, bsh, ish)
-    hl = analyze_hlo(lowered.compile().as_text())
-    n_coll = {k: v for k, v in hl.coll_by_kind_count.items()}
-    per_iter = hl.wire_bytes / 64.0
-    print(f"overlap/{method},{per_iter:.1f},counts={n_coll};wire_bytes_64it={hl.wire_bytes:.0f}")
+TIMED_ITERS = 64
+out = {"devices": 8, "n": A.n, "methods": {}}
+for method in ("h1", "h2", "h3", "h4", "pl2", "pl3"):
+    mesh = mesh2 if method == "h4" else mesh1
+    depth = get_method(method).pipeline_depth
+    runner = build_distributed_solver(As, mesh=mesh, method=method,
+                                      maxiter=TIMED_ITERS, replace_every=50)
+    run = jax.jit(lambda bb, ii, a, r: runner(bb, ii, a, r))
+
+    # structural census on the RR-free program: the steady-state schedule.
+    # (residual replacement adds a lax.cond branch whose collectives would
+    # be counted statically but execute only every replace_every iters)
+    census_runner = build_distributed_solver(As, mesh=mesh, method=method,
+                                             maxiter=TIMED_ITERS)
+    closed = jax.make_jaxpr(lambda bb, ii, a, r: census_runner(bb, ii, a, r))(
+        bsh, ish, jnp.float32(1e-6), jnp.float32(0.0))
+    body = while_body_jaxpr(closed.jaxpr)
+    red = count_primitive(body, "psum") / depth
+    pp = count_primitive(body, "ppermute") / depth
+    ag = count_primitive(body, "all_gather") / depth
+
+    # convergence: iterations to atol on the Poisson problem
+    res = run(bsh, ish, jnp.float32(1e-6), jnp.float32(0.0))
+    iters = int(jax.block_until_ready(res.iterations))
+
+    # timing: fixed-work solve (atol=0 -> all TIMED_ITERS iterations)
+    jax.block_until_ready(run(bsh, ish, jnp.float32(0.0), jnp.float32(0.0)))
+    times = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run(bsh, ish, jnp.float32(0.0), jnp.float32(0.0)))
+        times.append(time.perf_counter() - t0)
+    us_per_iter = sorted(times)[1] / TIMED_ITERS * 1e6
+
+    out["methods"][method] = {
+        "pipeline_depth": depth,
+        "reductions_per_iter": red,
+        "ppermutes_per_iter": pp,
+        "allgathers_per_iter": ag,
+        "iterations": iters,
+        "time_per_iter_us": round(us_per_iter, 1),
+    }
+    print(f"overlap/{method},{us_per_iter:.1f},"
+          f"red/it={red:g};ppermute/it={pp:g};allgather/it={ag:g};iters={iters}")
+print("BENCHJSON:" + json.dumps(out))
 """
 
 
-def main():
+def main(json_path: str | None = None):
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    out = subprocess.run([sys.executable, "-c", _CHILD], capture_output=True, text=True, env=env, timeout=600)
+    out = subprocess.run([sys.executable, "-c", _CHILD], capture_output=True,
+                         text=True, env=env, timeout=900)
     if out.returncode != 0:
         print(f"overlap/FAILED,0,{out.stderr[-300:]!r}")
         return
-    sys.stdout.write(out.stdout)
+    payload = None
+    for line in out.stdout.splitlines():
+        if line.startswith("BENCHJSON:"):
+            payload = json.loads(line[len("BENCHJSON:"):])
+        else:
+            sys.stdout.write(line + "\n")
+    if json_path and payload is not None:
+        from .common import bench_record, write_bench_json
+
+        write_bench_json(json_path, bench_record("overlap", **payload))
 
 
 if __name__ == "__main__":

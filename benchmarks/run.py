@@ -5,7 +5,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_convergence     — convergence equivalence (correctness premise)
   bench_solver_methods  — Fig. 6/7: method comparison across matrices
   bench_kernels         — §V-B: kernel fusion effect (time + HBM traffic)
-  bench_overlap         — h1/h2/h3 collective schedules (8-dev subprocess)
+  bench_overlap         — h1..h4/pl2/pl3 collective schedules + time/iter
+                          (8-dev subprocess; JSON-capable, CI-gated)
   bench_poisson         — Fig. 8: 125-pt Poisson + perf-model decomposition
   bench_roofline_table  — the 40-cell dry-run roofline (reads experiments/)
 
@@ -21,7 +22,7 @@ CLI (ReFrame-style harness):
                         spans + metrics snapshot as one JSON artifact
 
 CI runs ``--tiny --json-dir bench_out --only kernels --only
-solver_methods --obs-dump bench_out/obs_dump.json`` then gates
+solver_methods --only overlap --obs-dump bench_out/obs_dump.json`` then gates
 ``bench_out`` against the committed ``benchmarks/trajectory/`` with
 ``tools/bench_gate.py`` — a "faster" claim that regresses the trajectory
 beyond the noise band fails the build.
@@ -49,7 +50,7 @@ def main(argv=None) -> None:
         ("convergence", bench_convergence.main, {}),
         ("solver_methods", bench_solver_methods.main, {"json_path": True, "tiny": True}),
         ("kernels", bench_kernels.main, {"json_path": True, "tiny": True}),
-        ("overlap", bench_overlap.main, {}),
+        ("overlap", bench_overlap.main, {"json_path": True}),
         ("poisson", bench_poisson.main, {}),
         ("roofline_table", bench_roofline_table.main, {}),
     ]

@@ -19,6 +19,14 @@ handle — serving-loop economics without holding a plan handle.
     "pipecg"                        Algorithm 2, single device
     "pipecg_distributed" / "h1" /   shard_map over ``shards`` devices with
     "h2" / "h3"                     the named hybrid schedule (default h3)
+    "h4"                            hierarchical two-stage reduction on a
+                                    2-D (pod, sub) mesh (pass ``sub=``)
+    "pl2" / "pl3"                   depth-l pipelined CG: ONE global
+                                    reduction per l iterations (pass
+                                    ``replace_every=`` — recommended)
+
+    Distributed method x reducer selection matrix, reductions-per-
+    iteration table and residual-replacement guidance: docs/distributed.md.
 
 ``engine`` selects the iteration-core backend: "jnp" (reference),
 "pallas" (fused VMA+dots kernel, SPMV separate), "fused_iter" (the whole
@@ -78,7 +86,9 @@ def solve(
 
     Extra keyword arguments are forwarded to the method implementation —
     e.g. ``replace_every``/``spmv_engine``/``tile`` (pipecg),
-    ``shards``/``weights``/``partition``/``mesh`` (distributed methods). A keyword the method does not accept
+    ``shards``/``weights``/``partition``/``mesh``/``reducer``/``spmv``/
+    ``sub``/``replace_every`` (distributed methods — docs/distributed.md
+    has the selection matrix). A keyword the method does not accept
     raises TypeError (nothing is silently dropped). Nonzero ``x0`` is
     supported everywhere — distributed methods solve the shifted system
     ``A d = b - A x0`` and return ``x0 + d``.

@@ -26,7 +26,9 @@ Front-ends (thin configuration over the shared loop):
   chronopoulos_cg — single merged reduction/iter, not overlapped
   pipecg          — Algorithm 2 single-device (engine="pallas" fuses the
                     iteration core; spmv_engine routes the SPMV kernels)
-  distributed.pipecg_distributed — h1/h2/h3 on a device mesh
+  distributed.pipecg_distributed — h1..h4 / pl2 / pl3 on a device mesh
+                    (pl2/pl3 swap in the depth-l loop from
+                    ``make_deep_pipecg_core``; matrix in docs/distributed.md)
 
 The top-level plan/execute API (``repro.plan`` -> reusable ``SolverPlan``,
 plus one-shot ``repro.solve`` over a keyed plan cache; see ``repro.plan``)

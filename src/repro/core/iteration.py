@@ -48,6 +48,10 @@ run on padded operands pinned once per solve (``core.pipecg``).
 ``run_pipecg`` is the single solver loop all of them share; there is
 exactly one implementation of the recurrence in the repository
 (``pipecg_vma_core``) and both Pallas kernels' oracles delegate to it.
+``make_deep_pipecg_core(l)`` builds the communication-reduced sibling
+loop (ONE global reduction per *l* iterations — distributed methods
+``pl2``/``pl3``); the method x reducer selection matrix lives in
+docs/distributed.md.
 """
 from __future__ import annotations
 
@@ -64,6 +68,7 @@ __all__ = [
     "pipecg_vma_core",
     "vma_core_pallas",
     "make_fused_iter_core",
+    "make_deep_pipecg_core",
     "resolve_core_name",
     "get_core",
     "core_names",
@@ -358,3 +363,214 @@ def run_pipecg(
     out = jax.lax.while_loop(cond, body, state)
     i, x, norm, hist = out[0], out[1], out[-2], out[-1]
     return i, x, norm, norm <= thresh, hist
+
+
+# ---------------------------------------------------------------------------
+# depth-l pipelined (communication-reduced) CG — ONE reduction per l steps
+# ---------------------------------------------------------------------------
+
+def make_deep_pipecg_core(l: int):
+    r"""Build the depth-``l`` pipelined CG solver loop (1 reduction / l its).
+
+    PIPECG hides ONE global reduction behind ONE SPMV; once the reduction
+    latency exceeds an SPMV, that slack is spent and strong scaling stalls
+    (ROADMAP item 2, after Cornelis/Cools/Vanroose arXiv 1801.04728 and
+    Cools et al. arXiv 1905.06850). The depth-``l`` methods attack the
+    same bound by *amortization*: the while-loop body advances ``l`` CG
+    iterations on extra Krylov-basis recurrences and performs exactly ONE
+    packed global reduction — a (2l+1)x(2l+1) Gram matrix psum — per
+    body. The jaxpr census over the while body proves it: 1 ``psum`` per
+    ``l`` iterations, vs 1 per iteration for pipecg.
+
+    Per outer step on the split-preconditioned operator
+    ``At = D^{-1/2} A D^{-1/2}`` (Jacobi/identity only — exactly what the
+    distributed methods support; CG on ``At`` generates the same iterates
+    as Jacobi-PCG on ``A`` in exact arithmetic):
+
+    * **Z-basis recurrences** — the monomial bases
+      ``P_j = At^j p`` (j=0..l) and ``R_j = At^j r`` (j=0..l-1):
+      ``2l-1`` SPMVs, no communication beyond the SPMV's own halo.
+    * **ONE reduction** — the stacked Gram matrices ``V^T V`` and
+      ``V^T D^{-1} V`` of the basis ``V = [P | R]``, reduced through the
+      reducer's ``.array`` strategy (``core.reduce``).
+    * **l coordinate iterations** — classic CG steps carried as
+      length-(2l+1) coordinate vectors; every dot product is a tiny
+      ``c^T G c`` form, so no further communication. Per-lane convergence
+      masking keeps iteration counts exact (a solve that converges at
+      iteration 7 under ``pl3`` reports 7, not 9).
+    * **recurrence->vector recovery** + optional full-precision residual
+      replacement (``replace_every``), the same safety net ``run_pipecg``
+      uses, rounded to outer-step cadence.
+
+    The trade is explicit: reduction *count* drops ``l``-fold while SPMV
+    count rises to ``(2l-1)/l`` per iteration — the right exchange when
+    the global reduction latency, not local bandwidth, bounds scaling
+    (see docs/distributed.md for the selection matrix).
+
+    Returns a loop with the :func:`run_pipecg` signature (so
+    ``build_distributed_solver`` swaps it in transparently), tagged
+    ``pipeline_depth = l``. Requires an elementwise preconditioner
+    passed as ``inv_diag`` (None = identity); ``pc_fn``/``core`` are
+    accepted for signature compatibility and must be None/elementwise.
+    """
+    if l < 1:
+        raise ValueError(f"pipeline depth must be >= 1, got {l}")
+    m = 2 * l + 1  # basis size: P_0..P_l, R_0..R_{l-1}
+
+    # static shift matrix: coordinates of (At v) from coordinates of v.
+    # Columns l (P_l) and 2l (R_{l-1}) are zero — the inner CG steps never
+    # apply At to a vector reaching those basis tails (degree argument:
+    # p_j uses P_{<=j}, R_{<=j-1} for j < l).
+    import numpy as _np
+
+    S_np = _np.zeros((m, m), dtype=_np.float32)
+    for j in range(l):
+        S_np[j + 1, j] = 1.0
+    for j in range(l - 1):
+        S_np[l + 2 + j, l + 1 + j] = 1.0
+
+    def run_deep_pipecg(
+        b: jax.Array,
+        x0: jax.Array,
+        *,
+        spmv_fn: Callable[[jax.Array], jax.Array],
+        pc_fn: Optional[Callable[[jax.Array], jax.Array]] = None,
+        core: Optional[Callable] = None,
+        reducer: Optional[Reducer] = None,
+        inv_diag: Optional[jax.Array] = None,
+        atol,
+        rtol,
+        maxiter: int,
+        replace_every: int = 0,
+        replace_spmv_fn: Optional[Callable[[jax.Array], jax.Array]] = None,
+    ):
+        del pc_fn, core  # elementwise PC only; fused via inv_diag
+        if reducer is None:
+            reducer = make_reducer("local")
+        reduce_array = getattr(reducer, "array", None)
+        if reduce_array is None:
+            raise ValueError(
+                "deep-pipeline methods need a reducer with an '.array' "
+                "reduction (all core.reduce strategies have one; attach "
+                "reducer.array = ... on custom reducers)"
+            )
+        if replace_spmv_fn is None:
+            replace_spmv_fn = spmv_fn
+        dtype = b.dtype
+        acc = jnp.promote_types(dtype, jnp.float32)
+        S = jnp.asarray(S_np, acc)
+
+        # split preconditioning: solve At xt = bt with At = D^-1/2 A D^-1/2
+        if inv_diag is not None:
+            isd = jnp.sqrt(inv_diag)
+            dsq = jnp.where(isd > 0, 1.0 / jnp.where(isd > 0, isd, 1.0), 0.0)
+        else:
+            isd = dsq = None
+
+        def _split(v):
+            return isd * v if isd is not None else v
+
+        def _At(v, raw=spmv_fn):
+            return _split(raw(_split(v)))
+
+        with trace_scope("deep_pipecg.init"):
+            bt = _split(b)
+            xt0 = dsq * x0 if dsq is not None else x0
+            rt0 = bt - _At(xt0)
+            # convergence metric matches run_pipecg: ||u|| with u = D^-1 r
+            # = D^-1/2 rt, i.e. rt^T D^-1 rt — one init-only reduction
+            nn_part = dot_f32(rt0, inv_diag * rt0 if inv_diag is not None else rt0)
+            norm0 = jnp.sqrt(reducer(nn_part, nn_part, nn_part)[2])
+        thresh = jnp.maximum(
+            jnp.asarray(atol, norm0.dtype), jnp.asarray(rtol, norm0.dtype) * norm0
+        )
+        # +1 slack slot: sentinel writes from masked (converged/past-maxiter)
+        # inner steps land at maxiter+1 and are sliced off at the end
+        hist0 = jnp.full((maxiter + 2,), jnp.nan, jnp.float32).at[0].set(
+            norm0.astype(jnp.float32)
+        )
+        rr_outer = max(1, -(-replace_every // l)) if replace_every > 0 else 0
+
+        def cond(state):
+            i = state[0]
+            norm = state[-2]
+            return (i < maxiter) & (norm > thresh)
+
+        def body(state):
+            i, o, xt, rt, p, norm, hist = state
+
+            # --- Z-basis recurrences: 2l-1 SPMVs, zero extra reductions ---
+            with trace_scope("deep_pipecg.basis"):
+                basis = [p]
+                for _ in range(l):
+                    basis.append(_At(basis[-1]))
+                basis.append(rt)
+                for _ in range(l - 1):
+                    basis.append(_At(basis[-1]))
+                V = jnp.stack(basis)  # (m, R)
+
+            # --- the ONE global reduction per l iterations ---
+            with trace_scope("deep_pipecg.gram"):
+                Va = V.astype(acc)
+                G_loc = Va @ Va.T
+                if inv_diag is not None:
+                    H_loc = (Va * inv_diag.astype(acc)) @ Va.T
+                    G, H = reduce_array(jnp.stack([G_loc, H_loc]))
+                else:
+                    G = H = reduce_array(G_loc)
+
+            # --- l CG iterations in coordinates (no communication) ---
+            with trace_scope("deep_pipecg.coordinate_steps"):
+                pc = jnp.zeros((m,), acc).at[0].set(1.0)
+                rc = jnp.zeros((m,), acc).at[l + 1].set(1.0)
+                xc = jnp.zeros((m,), acc)
+                for j in range(l):
+                    active = (norm > thresh) & (i < maxiter)
+                    sc = S @ pc  # coordinates of At p
+                    rr = rc @ (G @ rc)
+                    pAp = pc @ (G @ sc)
+                    alpha = rr / pAp
+                    xc_n = xc + alpha * pc
+                    rc_n = rc - alpha * sc
+                    beta = (rc_n @ (G @ rc_n)) / rr
+                    pc_n = rc_n + beta * pc
+                    norm_n = jnp.sqrt(jnp.maximum(rc_n @ (H @ rc_n), 0.0))
+                    xc = jnp.where(active, xc_n, xc)
+                    rc = jnp.where(active, rc_n, rc)
+                    pc = jnp.where(active, pc_n, pc)
+                    norm = jnp.where(active, norm_n.astype(norm.dtype), norm)
+                    idx = jnp.where(active, i + 1, maxiter + 1)  # sentinel slot
+                    hist = hist.at[idx].set(norm_n.astype(jnp.float32))
+                    i = i + active.astype(jnp.int32)
+
+            # --- recover the full vectors from their coordinates ---
+            with trace_scope("deep_pipecg.recover"):
+                xt = xt + (xc.astype(dtype) @ V)
+                rt = (rc.astype(dtype) @ V)
+                p = (pc.astype(dtype) @ V)
+
+            if rr_outer > 0:
+                # Residual replacement at outer-step cadence: re-derive the
+                # true (split) residual at full precision to arrest the
+                # coordinate-recurrence drift — the deep-pipeline analogue
+                # of run_pipecg's replace_every safety net.
+                def _replace(args):
+                    xt_, rt_ = args
+                    with trace_scope("deep_pipecg.residual_replacement"):
+                        return xt_, bt - _At(xt_, raw=replace_spmv_fn)
+
+                xt, rt = jax.lax.cond(
+                    jnp.mod(o + 1, rr_outer) == 0, _replace, lambda a: a, (xt, rt)
+                )
+
+            return (i, o + 1, xt, rt, p, norm, hist)
+
+        state = (jnp.int32(0), jnp.int32(0), xt0, rt0, rt0, norm0, hist0)
+        out = jax.lax.while_loop(cond, body, state)
+        i, xt, norm, hist = out[0], out[2], out[-2], out[-1]
+        x = _split(xt)  # back-transform: x = D^-1/2 xt
+        return i, x, norm, norm <= thresh, hist[: maxiter + 1]
+
+    run_deep_pipecg.pipeline_depth = l
+    run_deep_pipecg.spmvs_per_iteration = (2 * l - 1) / l
+    return run_deep_pipecg

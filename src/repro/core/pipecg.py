@@ -5,7 +5,10 @@ Thin single-device front-end over the shared solver loop in
 whole-iteration ``fused_iter`` kernel), the SPMV engine and the (here:
 identity) reduction strategy are injected, so this file holds *no*
 iteration math of its own. The distributed solver (``core.distributed``)
-wraps the exact same loop in ``shard_map``.
+wraps the exact same loop in ``shard_map``; its communication-reduced
+siblings (``pl2``/``pl3`` depth-l pipelines, hierarchical "h4"
+reduction) and the method x reducer selection matrix are documented in
+docs/distributed.md.
 
 What this file *does* own is the **padded execution path**: the Pallas
 cores want LANE-aligned tiles, and padding ten vectors every iteration

@@ -14,10 +14,29 @@ over (``core.iteration.run_pipecg``):
 ``packed``    — the three partials stacked into ONE length-3 ``psum``
                 (Hybrid-PIPECG-2/3: the paper's copy-shrinking trick
                 applied to reduction latency, 3 collectives -> 1).
+``h4``        — hierarchical two-stage reduction on a 2-D (pod, sub)
+                mesh: ONE packed psum over the fast intra-pod sub-axis,
+                then ONE packed psum over the slow inter-pod axis. The
+                inter-pod stage is the only collective that crosses the
+                slow network boundary, and in PIPECG its result is not
+                consumed until the *next* iteration's scalar step — the
+                one-iteration slack of the pipelined recurrence is what
+                hides the inter-pod latency behind the local SPMV
+                (arXiv 1905.06850's global-reduction pipelining, mapped
+                onto XLA's dataflow schedule).
 
-New strategies (e.g. a two-phase hierarchical reduction across pods, or a
-delayed/asynchronous reduction) plug in via ``register_reducer`` without
-touching the solver loop.
+Every reducer built here also carries an ``array`` attribute — the same
+strategy applied to an arbitrary (stacked) array instead of the three
+scalars. The depth-l pipelined methods (``core.iteration.
+make_deep_pipecg_core``) reduce one packed Gram matrix per *l* iterations
+through it; for ``separate``/``packed`` that is a single psum (there is
+nothing to split once the partials are one array), for ``h4`` the same
+two-stage hierarchy.
+
+New strategies (e.g. a delayed/asynchronous reduction) plug in via
+``register_reducer`` without touching the solver loop; factories flagged
+``needs_subaxis = True`` (like ``h4``) are handed the full tuple of mesh
+axis names and require a 2-D mesh (``make_solver_mesh(n, sub=...)``).
 """
 from __future__ import annotations
 
@@ -26,9 +45,17 @@ from typing import Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["Reducer", "make_reducer", "register_reducer", "reducer_names"]
+__all__ = [
+    "Reducer",
+    "make_reducer",
+    "register_reducer",
+    "reducer_names",
+    "reducer_needs_subaxis",
+]
 
 # A Reducer maps the three local dot partials to the three global dots.
+# Reducers built by make_reducer additionally expose ``.array``:
+# an (arbitrary-shaped) array of local partials -> globally reduced array.
 Reducer = Callable[[jax.Array, jax.Array, jax.Array], Tuple[jax.Array, jax.Array, jax.Array]]
 
 
@@ -36,7 +63,10 @@ def _local(g, d, nn):
     return g, d, nn
 
 
-def _separate(axis: str) -> Reducer:
+_local.array = lambda a: a
+
+
+def _separate(axis) -> Reducer:
     def reduce(g, d, nn):
         return (
             jax.lax.psum(g, axis),
@@ -44,23 +74,53 @@ def _separate(axis: str) -> Reducer:
             jax.lax.psum(nn, axis),
         )
 
+    reduce.array = lambda a: jax.lax.psum(a, axis)
     return reduce
 
 
-def _packed(axis: str) -> Reducer:
+def _packed(axis) -> Reducer:
     def reduce(g, d, nn):
         packed = jax.lax.psum(jnp.stack([g, d, nn]), axis)
         return packed[0], packed[1], packed[2]
 
+    reduce.array = lambda a: jax.lax.psum(a, axis)
     return reduce
 
 
-# factory(axis) -> Reducer; axis is None for strategies that need no mesh
+def _hierarchical(axes) -> Reducer:
+    if not isinstance(axes, (tuple, list)) or len(axes) != 2:
+        raise ValueError(
+            "reduction strategy 'h4' needs a 2-D mesh: pass the (pod, sub) "
+            f"axis-name tuple (build one via make_solver_mesh(n, sub=...)), got {axes!r}"
+        )
+    pod_axis, sub_axis = axes
+
+    def _two_stage(a):
+        # stage 1: fast intra-pod reduction; stage 2: the one inter-pod
+        # collective, whose result PIPECG consumes an iteration later
+        return jax.lax.psum(jax.lax.psum(a, sub_axis), pod_axis)
+
+    def reduce(g, d, nn):
+        packed = _two_stage(jnp.stack([g, d, nn]))
+        return packed[0], packed[1], packed[2]
+
+    reduce.array = _two_stage
+    return reduce
+
+
+_hierarchical.needs_subaxis = True
+
+
+# factory(axis) -> Reducer; axis is None for strategies that need no mesh,
+# a mesh-axis name (or tuple of names) otherwise. ``needs_subaxis``
+# factories are handed the full (pod, sub) axis-name tuple.
 _REDUCERS: Dict[str, Callable[[Optional[str]], Reducer]] = {
     "local": lambda axis: _local,
     "separate": lambda axis: _separate(axis),
     "packed": lambda axis: _packed(axis),
+    "h4": lambda axes: _hierarchical(axes),
 }
+_REDUCERS["h4"].needs_subaxis = True
 
 
 def register_reducer(
@@ -68,8 +128,12 @@ def register_reducer(
 ) -> None:
     """Register a reduction strategy: ``factory(axis_name) -> Reducer``.
 
-    Raises ValueError if ``name`` is already registered, unless
-    ``overwrite=True`` — silent replacement hides plug-in clashes.
+    The returned reducer should also expose ``.array`` (strategy applied
+    to one stacked array) so the depth-l pipelined methods can use it;
+    flag the factory ``needs_subaxis = True`` when it requires the 2-D
+    (pod, sub) mesh axis tuple. Raises ValueError if ``name`` is already
+    registered, unless ``overwrite=True`` — silent replacement hides
+    plug-in clashes.
     """
     if name in _REDUCERS and not overwrite:
         raise ValueError(
@@ -83,8 +147,15 @@ def reducer_names() -> Tuple[str, ...]:
     return tuple(sorted(_REDUCERS))
 
 
-def make_reducer(strategy: str, axis: Optional[str] = None) -> Reducer:
-    """Build the Reducer for ``strategy`` over mesh axis ``axis``."""
+def reducer_needs_subaxis(strategy: str) -> bool:
+    """True if ``strategy`` requires a 2-D (pod, sub) mesh (e.g. "h4")."""
+    if strategy not in _REDUCERS:
+        raise ValueError(f"unknown reduction strategy {strategy!r}; have {reducer_names()}")
+    return bool(getattr(_REDUCERS[strategy], "needs_subaxis", False))
+
+
+def make_reducer(strategy: str, axis=None) -> Reducer:
+    """Build the Reducer for ``strategy`` over mesh axis (or axes) ``axis``."""
     if strategy not in _REDUCERS:
         raise ValueError(f"unknown reduction strategy {strategy!r}; have {reducer_names()}")
     if strategy != "local" and axis is None:

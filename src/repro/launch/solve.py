@@ -33,8 +33,8 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--matrix", default="poisson27:12")
     ap.add_argument("--method", default=None, choices=sorted(set(solver_names())),
-                    help="solver method; h1/h2/h3 are distributed (set --shards); "
-                         "default: pipecg, or h3 when --shards > 1")
+                    help="solver method; h1..h4/pl2/pl3 are distributed (set --shards; "
+                         "h4 also needs --sub); default: pipecg, or h3 when --shards > 1")
     ap.add_argument("--solver", default=None, help="deprecated alias for --method")
     ap.add_argument("--engine", default="auto",
                     choices=["auto", "jnp", "pallas", "fused_iter"],
@@ -48,6 +48,9 @@ def main(argv=None):
     ap.add_argument("--replace-every", type=int, default=None,
                     help="residual-replacement period (default: 0, or 50 under bf16)")
     ap.add_argument("--weighted", action="store_true", help="nnz perf-model partition (h3)")
+    ap.add_argument("--sub", type=int, default=None,
+                    help="reducer sub-axis size: shards devices become a "
+                         "(shards/sub, sub) pod mesh (required by h4)")
     ap.add_argument("--rhs", type=int, default=1,
                     help="number of right-hand sides served through the one plan")
     args = ap.parse_args(argv)
@@ -57,7 +60,7 @@ def main(argv=None):
     b = spmv(A, xstar)
     print(f"matrix {args.matrix}: N={A.n} nnz/N={A.nnz()/A.n:.1f} bw={A.bandwidth}")
 
-    distributed = ("h1", "h2", "h3", "pipecg_distributed")
+    distributed = ("h1", "h2", "h3", "h4", "pl2", "pl3", "pipecg_distributed")
     method = args.solver or args.method
     kw = {}
     if args.shards > 1:
@@ -66,6 +69,10 @@ def main(argv=None):
         elif method not in distributed:
             ap.error(f"--method {method} is single-device; with --shards use one of {distributed}")
         kw = {"shards": args.shards, "partition": "nnz" if args.weighted else "rows"}
+        if args.sub is not None:
+            kw["sub"] = args.sub
+        if args.replace_every is not None:
+            kw["replace_every"] = args.replace_every
     else:
         if method is None:
             method = "pipecg"

@@ -51,7 +51,6 @@ from .obs.trace import enabled as _obs_enabled, span as _span, trace_scope as _t
 from .core import chronopoulos_cg, identity, jacobi, pcg, pipecg
 from .core.distributed import (
     build_distributed_solver,
-    get_method,
     make_solver_mesh,
     method_names,
 )
@@ -231,10 +230,15 @@ class SolverPlan:
         weights = kwargs.pop("weights", None)
         partition = kwargs.pop("partition", "rows")
         mesh = kwargs.pop("mesh", None)
+        reducer = kwargs.pop("reducer", None)
+        spmv_strategy = kwargs.pop("spmv", None)
+        sub = kwargs.pop("sub", None)
+        replace_every = int(kwargs.pop("replace_every", 0) or 0)
         if kwargs:
             raise TypeError(
                 f"distributed plan does not accept {sorted(kwargs)}; it takes "
-                f"['dist_method', 'mesh', 'partition', 'shards', 'weights']"
+                f"['dist_method', 'mesh', 'partition', 'reducer', "
+                f"'replace_every', 'shards', 'spmv', 'sub', 'weights']"
             )
         A = self.A
         if not isinstance(A, DIAMatrix):
@@ -266,16 +270,35 @@ class SolverPlan:
         self.shards = int(shards)
         self.bounds = tuple(int(x) for x in np.asarray(bounds))
         with _span("plan.shard"):
-            self.mesh = mesh if mesh is not None else make_solver_mesh(shards)
+            self.mesh = mesh if mesh is not None else make_solver_mesh(shards, sub=sub)
             self.sharded = shard_dia(A, bounds)  # the reusable operator handle
+        # every knob that changes the compiled program goes in here — this
+        # dict is what describe() reports, and the same knobs (as user
+        # kwargs) are what _plan_key freezes, so pl2/pl3/h4/sub/replace
+        # variants never collide in the plan cache
         self.kwargs = {"dist_method": dist_method, "shards": self.shards,
-                       "partition": partition}
-        with _span("plan.build_solver", dist_method=dist_method):
-            runner = build_distributed_solver(
-                self.sharded, mesh=self.mesh, method=dist_method,
-                engine=self.engine, maxiter=self.maxiter,
-            )
+                       "partition": partition, "reducer": reducer,
+                       "spmv": spmv_strategy, "sub": sub,
+                       "replace_every": replace_every}
+
+        def _build_runner(nrhs=None):
+            with _span("plan.build_solver", dist_method=dist_method,
+                       nrhs=0 if nrhs is None else int(nrhs)):
+                return build_distributed_solver(
+                    self.sharded, mesh=self.mesh, method=dist_method,
+                    engine=self.engine, maxiter=self.maxiter,
+                    reducer=reducer, spmv=spmv_strategy,
+                    replace_every=replace_every, nrhs=nrhs,
+                )
+
+        self._build_runner = _build_runner
+        self._batched_runners = {}  # (k, with_x0) -> jitted batched program
+        runner = _build_runner()
+        self.pipeline_depth = runner.pipeline_depth
+        self.reducer = runner.reduce_name
+        self.spmv_strategy = runner.spmv_name
         inv_sh = shard_vector(inv_diag, bounds)
+        self._inv_sh = inv_sh
         bounds_arr = self.bounds
 
         def _solve_rhs(rhs, atol, rtol) -> SolveResult:
@@ -387,10 +410,13 @@ class SolverPlan:
 
         Single-device methods run as ONE vmapped XLA program (per-lane
         results are exact; wall-clock is set by the slowest rhs).
-        Distributed methods run sequentially per rhs — shard_map does not
-        nest under vmap — but still reuse this plan's pinned program and
-        operator handle. With observability enabled the batch is
-        synchronized/timed and batch metrics are recorded.
+        Distributed methods also run as ONE program: the solver loop is
+        vmapped *inside* the shard_map block, so each global reduction
+        carries the whole batch's partials (k-fold useful work per
+        reduction — see docs/distributed.md). The batched program is
+        built+compiled once per batch size k and cached on the plan.
+        With observability enabled the batch is synchronized/timed and
+        batch metrics are recorded.
         """
         if not _obs_enabled():
             return self._execute_batched(B, x0, atol, rtol)
@@ -422,14 +448,59 @@ class SolverPlan:
             _metrics.histogram("plan.solve_iterations").record(int(it))
         return res
 
+    def _batched_distributed(self, k: int, with_x0: bool):
+        """The (k rhs, warm-start?) batched program, built+jitted once per k.
+
+        One shard_map program for the whole batch: the solver loop is
+        vmapped INSIDE the block (core.distributed), so every global
+        reduction carries k systems' partials — no Python per-rhs loop.
+        """
+        cached = self._batched_runners.get((k, with_x0))
+        if cached is not None:
+            return cached
+        runner = self._build_runner(nrhs=k)
+        A, bounds, inv_sh = self.A, self.bounds, self._inv_sh
+
+        def _solve_rhs_batch(B, atol, rtol) -> SolveResult:
+            from .sparse import shard_vectors, unshard_vectors
+
+            res = runner(shard_vectors(B, bounds), inv_sh, atol, rtol)
+            return SolveResult(
+                x=unshard_vectors(res.x, bounds), iterations=res.iterations,
+                residual_norm=res.residual_norm, converged=res.converged,
+                history=res.history,
+            )
+
+        if with_x0:
+            def _inner(B, X0, atol, rtol):
+                # warm starts via the shifted systems A d_k = b_k - A x0_k
+                self._traces += 1
+                _metrics.counter("plan.traces").inc()
+                res = _solve_rhs_batch(B - jax.vmap(lambda v: spmv(A, v))(X0), atol, rtol)
+                return SolveResult(
+                    x=X0 + res.x, iterations=res.iterations,
+                    residual_norm=res.residual_norm, converged=res.converged,
+                    history=res.history,
+                )
+        else:
+            def _inner(B, atol, rtol):
+                self._traces += 1
+                _metrics.counter("plan.traces").inc()
+                return _solve_rhs_batch(B, atol, rtol)
+
+        jitted = jax.jit(_inner)
+        self._batched_runners[(k, with_x0)] = jitted
+        return jitted
+
     def _execute_batched(self, B, x0, atol, rtol) -> SolveResult:
+        atol, rtol = self._tols(atol, rtol)
         if self.distributed:
-            xs = [None] * B.shape[0] if x0 is None else list(x0)
-            results = [self.solve(b, x0=x, atol=atol, rtol=rtol) for b, x in zip(B, xs)]
-            return jax.tree_util.tree_map(lambda *leaves: jnp.stack(leaves), *results)
+            run = self._batched_distributed(int(B.shape[0]), x0 is not None)
+            if x0 is None:
+                return run(B, atol, rtol)
+            return run(B, x0, atol, rtol)
         if self._run_batched is None:
             self._run_batched = jax.jit(jax.vmap(self._inner, in_axes=(0, 0, None, None)))
-        atol, rtol = self._tols(atol, rtol)
         if x0 is None:
             x0 = jnp.zeros_like(B)
         return self._run_batched(B, x0, atol, rtol)
@@ -450,14 +521,16 @@ class SolverPlan:
             "trace_count": self._traces,
         }
         if self.distributed:
-            cfg = get_method(self.dist_method)
             d.update(
                 shards=self.shards,
                 shard_bounds=self.bounds,
                 rows_per_shard=tuple(int(x) for x in np.diff(self.bounds)),
-                reducer=cfg.reduce,
-                spmv_strategy=cfg.spmv,
+                reducer=self.reducer,            # override-resolved, not the
+                spmv_strategy=self.spmv_strategy,  # method's registered default
                 mesh_axes=tuple(self.mesh.axis_names),
+                pipeline_depth=self.pipeline_depth,
+                sub=self.kwargs.get("sub"),
+                replace_every=self.kwargs.get("replace_every", 0),
             )
         else:
             d.update({k: v for k, v in self.kwargs.items() if v is not None})
@@ -491,7 +564,9 @@ def plan(A, method: str = "pipecg", engine: str = "auto", M="jacobi",
     ``spmv_engine``/``tile`` (pipecg — a pipecg plan with
     ``engine="fused_iter"`` builds the whole-iteration fused core and its
     padded operator views once, right here), ``shards``/``weights``/
-    ``partition``/``mesh`` (distributed methods). ``atol``/``rtol`` set
+    ``partition``/``mesh``/``reducer``/``spmv``/``sub``/``replace_every``
+    (distributed methods — ``sub`` builds the 2-D hierarchical mesh the
+    "h4" reducer needs; see docs/distributed.md for the selection matrix). ``atol``/``rtol`` set
     the plan's *defaults* — ``plan.solve(b, atol=...)`` overrides per
     call without retracing.
     """

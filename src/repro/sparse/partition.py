@@ -38,6 +38,8 @@ __all__ = [
     "shard_dia",
     "shard_vector",
     "unshard_vector",
+    "shard_vectors",
+    "unshard_vectors",
     "partition_stats",
 ]
 
@@ -115,13 +117,15 @@ def shard_dia(dia: DIAMatrix, boundaries: np.ndarray) -> ShardedDIA:
     sizes = np.diff(boundaries)
     rows_max = int(sizes.max())
     hw = dia.bandwidth
-    if rows_max < hw:
+    if int(sizes.min()) < hw and not (sizes == rows_max).all():
+        # equal shards are fine at any bandwidth: the halo SPMV walks
+        # ceil(hw/rows) ring hops; only the unequal (performance-model)
+        # partition is restricted to single-hop neighbor exchange
         raise ValueError(
-            f"shard rows ({rows_max}) must be >= bandwidth ({hw}) so halo "
-            f"exchange touches only ring neighbors"
+            f"smallest shard ({int(sizes.min())}) < bandwidth ({hw}): "
+            f"unequal shards support single-hop halo only (use balanced_rows "
+            f"for the multi-hop path)"
         )
-    if int(sizes.min()) < hw:
-        raise ValueError(f"smallest shard ({int(sizes.min())}) < bandwidth ({hw})")
     k = dia.n_diags
     data_np = np.asarray(dia.data)
     out = np.zeros((P, k, rows_max), dtype=data_np.dtype)
@@ -151,6 +155,22 @@ def shard_vector(x: jax.Array, boundaries) -> jax.Array:
         lo, hi = int(boundaries[p]), int(boundaries[p + 1])
         out = out.at[p, : hi - lo].set(x[lo:hi])
     return out
+
+
+def shard_vectors(xs: jax.Array, boundaries) -> jax.Array:
+    """(k, n) rhs batch -> (P, k, rows_max), the batched-solver layout.
+
+    Shard axis leads (matches ShardedDIA / shard_map in_specs); the rhs
+    axis sits between shard and row so each device holds its k local row
+    blocks contiguously.
+    """
+    return jnp.stack([shard_vector(x, boundaries) for x in xs], axis=1)
+
+
+def unshard_vectors(xs: jax.Array, boundaries) -> jax.Array:
+    """(P, k, rows_max) -> (k, n): inverse of shard_vectors."""
+    k = xs.shape[1]
+    return jnp.stack([unshard_vector(xs[:, j], boundaries) for j in range(k)])
 
 
 def unshard_vector(xs: jax.Array, boundaries) -> jax.Array:

@@ -47,7 +47,10 @@ import sys
 from typing import Dict, Tuple
 
 # metric classification by key leaf (last dotted component)
-STRUCTURAL = ("launches_per_iter", "bytes_per_elem")
+STRUCTURAL = ("launches_per_iter", "bytes_per_elem",
+              # distributed collective censuses (BENCH_overlap.json): a
+              # schedule is a property of program construction, noise-free
+              "reductions_per_iter", "ppermutes_per_iter", "allgathers_per_iter")
 CONVERGENCE_PREFIXES = ("iters_", "iterations")
 TIMING_MARKERS = ("us_per_", "_gbs", "time_", "_us")
 # provenance/config keys: informational, never gated
