@@ -1,0 +1,107 @@
+"""Serving-tier benchmark: queue wait, bucket occupancy, program count.
+
+Drives a :class:`repro.serve.SolverServer` (the async tier from
+docs/serving.md) with the same mixed-size workload shape as
+``repro.launch.serve``: a waited-on priming single (so the single-rhs
+program traces deterministically) followed by bursts cycling bucket
+sizes 1 / cap / cap//2 / 3. Emits the serving SLOs:
+
+* ``queue_wait_p50_us`` / ``queue_wait_p95_us`` — admission-to-launch
+  latency (timing-gated, env-fingerprinted, 4x band);
+* ``programs_compiled`` — total XLA programs traced across the pool;
+  structural (any increase over the committed trajectory fails CI — a
+  third program per plan means the two-program steady state regressed);
+* ``occupancy_mean`` — bucket-shape quality (informational: bucket
+  formation is timing-dependent, so it is recorded but not gated);
+* ``iters_min`` / ``iters_max`` — per-request honest iteration counts
+  from the NaN-tail census (convergence-gated).
+
+Inputs are deterministic (fixed rhs scalings of one spmv-made b), so the
+structural and convergence columns are stable across runs.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax.numpy as jnp
+
+from repro.serve import SolverServer
+from repro.sparse import poisson27, spmv
+
+from .common import bench_record, emit, write_bench_json
+
+MAX_BATCH = 4
+REQUESTS = 24
+
+
+def _workload(server: SolverServer, A, requests: int):
+    """Prime both programs, then burst mixed bucket sizes; returns the
+    burst results only — queue waits should reflect the warm steady
+    state, not the one-time compiles (those are the launcher's story)."""
+    xstar = jnp.ones((A.n,)) / jnp.sqrt(A.n)
+    b = spmv(A, xstar)
+    server.submit(A, b).result(timeout=300.0)          # single program
+    for f in server.submit_many(A, [b] * MAX_BATCH):   # bucket program
+        f.result(timeout=300.0)
+    t0 = time.perf_counter()
+    futures, i = [], 1
+    while i < requests:
+        for size in (1, MAX_BATCH, max(MAX_BATCH // 2, 1), 3):
+            k = min(size, requests - i)
+            if k <= 0:
+                break
+            futures += server.submit_many(
+                A, [(1.0 + 0.1 * (i + j)) * b for j in range(k)]
+            )
+            i += k
+    results = [f.result(timeout=300.0) for f in futures]
+    return results, time.perf_counter() - t0
+
+
+def _pct(sorted_xs, q):
+    return sorted_xs[min(int(q * (len(sorted_xs) - 1)), len(sorted_xs) - 1)]
+
+
+def main(tiny: bool = False, json_path: str | None = None):
+    dims = [6] if tiny else [6, 10]
+    record_mats = {}
+    for dim in dims:
+        A = poisson27(dim)
+        name = f"poisson27-{dim}"
+        with SolverServer(max_batch=MAX_BATCH, max_wait_ms=5.0,
+                          method="pipecg", engine="auto", atol=1e-5,
+                          maxiter=2000) as server:
+            results, wall = _workload(server, A, REQUESTS)
+            programs = sum(p.trace_count for p in server.plans())
+
+        waits = sorted(r.queue_wait_s * 1e6 for r in results)
+        occ = [r.bucket_occupancy for r in results]
+        iters = [r.iterations for r in results]
+        p50, p95 = _pct(waits, 0.5), _pct(waits, 0.95)
+        emit(f"serve/{name}/queue_wait_p50", p50, f"p95={p95:.0f}us")
+        emit(f"serve/{name}/request", wall * 1e6 / len(results),
+             f"occ={sum(occ) / len(occ):.2f},programs={programs}")
+        record_mats[name] = {
+            "n": A.n,
+            "requests": len(results),
+            "queue_wait_p50_us": p50,
+            "queue_wait_p95_us": p95,
+            "occupancy_mean": sum(occ) / len(occ),
+            "programs_compiled": programs,
+            "iters_min": int(min(iters)),
+            "iters_max": int(max(iters)),
+        }
+
+    if json_path:
+        write_bench_json(json_path, bench_record(
+            "serve", tiny=tiny, max_batch=MAX_BATCH, matrices=record_mats,
+        ))
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    main(tiny=args.tiny, json_path=args.json)

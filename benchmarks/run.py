@@ -7,6 +7,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_kernels         — §V-B: kernel fusion effect (time + HBM traffic)
   bench_overlap         — h1..h4/pl2/pl3 collective schedules + time/iter
                           (8-dev subprocess; JSON-capable, CI-gated)
+  bench_serve           — async serving tier: queue wait p50/p95, bucket
+                          occupancy, programs compiled (JSON, CI-gated)
   bench_poisson         — Fig. 8: 125-pt Poisson + perf-model decomposition
   bench_roofline_table  — the 40-cell dry-run roofline (reads experiments/)
 
@@ -43,6 +45,7 @@ def main(argv=None) -> None:
         bench_overlap,
         bench_poisson,
         bench_roofline_table,
+        bench_serve,
         bench_solver_methods,
     )
 
@@ -51,6 +54,7 @@ def main(argv=None) -> None:
         ("solver_methods", bench_solver_methods.main, {"json_path": True, "tiny": True}),
         ("kernels", bench_kernels.main, {"json_path": True, "tiny": True}),
         ("overlap", bench_overlap.main, {"json_path": True}),
+        ("serve", bench_serve.main, {"json_path": True, "tiny": True}),
         ("poisson", bench_poisson.main, {}),
         ("roofline_table", bench_roofline_table.main, {}),
     ]

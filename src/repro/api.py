@@ -45,6 +45,10 @@ The registry is open: ``register_solver`` adds new (jit-traceable) methods
 without touching call sites — ``launch/solve.py``,
 ``serve.engine.SolverEngine``, the benchmarks and the examples all go
 through plans.
+
+For live traffic, the async serving tier (``repro.serve.SolverServer``:
+admission queue with backpressure, plan-pool router, cross-process
+warm-start manifests) wraps this same plan cache — see docs/serving.md.
 """
 from __future__ import annotations
 

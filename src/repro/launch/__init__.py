@@ -1,4 +1,28 @@
-"""Launch layer: production meshes, sharding rules, dry-run, rooflines."""
-from .mesh import make_production_mesh, make_solver_mesh_from
+"""Launch layer: env hygiene, entrypoints, production meshes, rooflines.
 
-__all__ = ["make_production_mesh", "make_solver_mesh_from"]
+Lazy exports: importing ``repro.launch`` (or ``repro.launch.env``) must
+NOT import jax — the whole point of ``launch.env.apply_env`` is to run
+before the first jax import, and an eager ``from .mesh import ...`` here
+would defeat it.
+"""
+_LAZY = {
+    "make_production_mesh": ".mesh",
+    "make_solver_mesh_from": ".mesh",
+    "apply_env": ".env",
+    "tcmalloc_note": ".env",
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+
+        mod = importlib.import_module(_LAZY[name], __name__)
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

@@ -11,6 +11,18 @@ from __future__ import annotations
 
 import argparse
 
+import sys
+
+# env hygiene BEFORE the first jax import (repro and repro.launch are
+# both lazy, so running `python -m repro.launch.solve` reaches this line
+# jax-free); a no-op for every variable the operator already set. Guarded
+# so importing this module for build_matrix() from an already-running
+# process stays silent.
+if "jax" not in sys.modules:
+    from .env import apply_env
+
+    apply_env()
+
 import jax.numpy as jnp
 
 from .. import plan, solver_names

@@ -36,6 +36,7 @@ one compiled program.
 """
 from __future__ import annotations
 
+import hashlib
 import inspect
 import sys as _sys
 import time
@@ -66,9 +67,46 @@ __all__ = [
     "register_solver",
     "solver_names",
     "get_plan",
+    "operator_fingerprint",
     "plan_cache_stats",
     "clear_plan_cache",
 ]
+
+
+def operator_fingerprint(A) -> str:
+    """Stable content hash of an operator, for cross-process plan keying.
+
+    Unlike the in-process plan cache (which keys on ``id(A)``), this
+    digests the operator's *contents* — type, static metadata, and array
+    bytes — so two processes that build the same matrix derive the same
+    fingerprint. This is what the serving tier's plan pool
+    (``serve.router``) and the warm-start manifests (``serve.warmstart``)
+    key on. Operators whose identity lives in Python objects (e.g. a
+    matrix-free ``FunctionOperator``'s ``fn``) fall back to an
+    ``id:``-prefixed process-local fingerprint: poolable, not
+    manifest-portable.
+    """
+    h = hashlib.sha256()
+    h.update(type(A).__name__.encode())
+    if isinstance(A, DIAMatrix):
+        h.update(repr((A.n, A.offsets, str(A.dtype))).encode())
+        h.update(np.asarray(A.data).tobytes())
+    elif hasattr(A, "ndim") and not hasattr(A, "matvec"):  # dense array
+        arr = np.asarray(A)
+        h.update(repr((arr.shape, str(arr.dtype))).encode())
+        h.update(arr.tobytes())
+    else:
+        try:
+            leaves, treedef = jax.tree_util.tree_flatten(A)
+            td = repr(treedef)
+            if "0x" in td:  # object reprs with addresses: not portable
+                return f"id:{id(A):x}"
+            h.update(td.encode())
+            for leaf in leaves:
+                h.update(np.asarray(leaf).tobytes())
+        except Exception:
+            return f"id:{id(A):x}"
+    return h.hexdigest()[:16]
 
 
 def _resolve_pc(M, A):
@@ -549,6 +587,44 @@ class SolverPlan:
                 else:
                     d.update(core=cn, spmv_engine=se, replace_every=rep)
         return d
+
+    def config(self) -> dict:
+        """JSON-able rebuild recipe: ``plan(A, **cfg)`` on an operator with
+        the same contents reproduces this plan (same ``describe()``, same
+        pool key). This is the manifest-export hook the serving tier's
+        cross-process warm start (``serve.warmstart``) serializes; it
+        raises for plans whose configuration holds live Python objects
+        (custom preconditioner / pinned core / explicit mesh) — those
+        cannot be rebuilt from JSON.
+        """
+        if isinstance(self.M, JacobiPC):
+            M = "jacobi"
+        elif isinstance(self.M, IdentityPC):
+            M = "identity"
+        else:
+            raise ValueError(
+                f"plan with a custom preconditioner object "
+                f"({type(self.M).__name__}) is not manifest-serializable; "
+                "use M='jacobi'/'identity'"
+            )
+        cfg = {
+            "method": self.method,
+            "engine": self.engine,
+            "M": M,
+            "atol": self.atol,
+            "rtol": self.rtol,
+            "maxiter": self.maxiter,
+        }
+        for k, v in self.kwargs.items():
+            if v is None:
+                continue
+            if not isinstance(v, (bool, int, float, str)):
+                raise ValueError(
+                    f"plan kwarg {k}={type(v).__name__} is not "
+                    "manifest-serializable (pass plain scalars/strings)"
+                )
+            cfg[k] = v
+        return cfg
 
     def __repr__(self) -> str:
         cfg = ", ".join(f"{k}={v!r}" for k, v in self.describe().items())

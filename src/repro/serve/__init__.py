@@ -1,3 +1,64 @@
-from .engine import ServeConfig, generate, make_decode_step
+"""repro.serve — batched + async solver serving over the plan cache.
 
-__all__ = ["ServeConfig", "generate", "make_decode_step"]
+* ``engine``    — ``SolverEngine``: synchronous bucket coalescing over one
+  pinned plan (plus the LM generate loop this package started from).
+* ``queue``     — bounded admission queue + bucket-closing batch policy
+  (full OR timeout), explicit backpressure (``QueueFull``), deadlines.
+* ``router``    — pool of warm ``SolverPlan``s keyed by (operator
+  fingerprint, method, engine, tolerance bucket); async misses, LRU
+  eviction with in-flight pinning.
+* ``warmstart`` — JSON plan manifests: a fresh replica rebuilds and
+  re-traces every plan at startup ("hot in seconds").
+* ``server``    — ``SolverServer``: the façade wiring them together.
+
+Architecture + tuning knobs: docs/serving.md.
+"""
+from .engine import (
+    ServeConfig,
+    SolverEngine,
+    bucket_waste,
+    generate,
+    make_decode_step,
+    record_bucket,
+)
+from .queue import (
+    DeadlineExceeded,
+    QueueFull,
+    RequestQueue,
+    ServerClosed,
+    SolveRequest,
+)
+from .router import PlanEntry, PlanPool, pool_key, tolerance_bucket
+from .server import ServeResult, SolverServer
+from .warmstart import (
+    build_operator,
+    load_manifest,
+    operator_spec,
+    register_operator_builder,
+    save_manifest,
+)
+
+__all__ = [
+    "DeadlineExceeded",
+    "PlanEntry",
+    "PlanPool",
+    "QueueFull",
+    "RequestQueue",
+    "ServeConfig",
+    "ServeResult",
+    "ServerClosed",
+    "SolveRequest",
+    "SolverEngine",
+    "SolverServer",
+    "bucket_waste",
+    "build_operator",
+    "generate",
+    "load_manifest",
+    "make_decode_step",
+    "operator_spec",
+    "pool_key",
+    "record_bucket",
+    "register_operator_builder",
+    "save_manifest",
+    "tolerance_bucket",
+]

@@ -26,7 +26,47 @@ from ..models.zoo import ModelApi
 from ..obs import metrics as _metrics
 from ..obs.trace import enabled as _obs_enabled, span as _span
 
-__all__ = ["ServeConfig", "SolverEngine", "generate", "make_decode_step"]
+__all__ = [
+    "ServeConfig",
+    "SolverEngine",
+    "bucket_waste",
+    "generate",
+    "make_decode_step",
+    "record_bucket",
+]
+
+
+def record_bucket(valid: int, size: int) -> None:
+    """Per-bucket occupancy accounting, shared by every batching path.
+
+    One call per compiled bucket execution: ``valid`` live rhs out of
+    ``size`` lanes. Feeds the ``serve.buckets`` / ``serve.padded_lanes``
+    counters and the ``serve.batch_occupancy`` histogram — the numbers
+    the async tier's batcher (``serve.queue``) and ``SolverEngine`` both
+    report, so occupancy is always per *bucket*, never per call.
+    """
+    _metrics.counter("serve.buckets").inc()
+    _metrics.counter("serve.padded_lanes").inc(size - valid)
+    _metrics.histogram("serve.batch_occupancy").record(valid / size)
+
+
+def bucket_waste(iters, step: int) -> int:
+    """Lane-iterations wasted by each bucket's shared worst-case stop.
+
+    ``iters`` are per-rhs iteration counts in submission order; lanes ride
+    until the slowest rhs of their OWN ``step``-sized bucket stops, so the
+    per-bucket ``max - it`` sum is pure occupancy waste — the number
+    difficulty-aware routing should shrink.
+    """
+    import numpy as np
+
+    iters = np.asarray(iters).ravel()
+    step = max(int(step), 1)
+    return sum(
+        int((grp.max() - grp).sum())
+        for lo in range(0, len(iters), step)
+        if len(grp := iters[lo : lo + step])
+    )
 
 
 @dataclass(frozen=True)
@@ -134,9 +174,15 @@ class SolverEngine:
     into buckets of exactly ``max_batch`` rhs (the final partial bucket is
     zero-padded to size), so any traffic pattern executes the same two
     compiled programs — the paper's setup-once economics applied to the
-    serving tier. Distributed methods (h1/h2/h3) are served through the
-    same plan (operator sharded once, at construction); each request runs
-    sequentially since shard_map does not nest under vmap.
+    serving tier. Distributed methods (h1..h4/pl2/pl3) are served through
+    the same plan (operator sharded once, at construction); batches run as
+    ONE program with the loop vmapped inside the shard_map block, so they
+    are never re-split into ``max_batch`` buckets here.
+
+    This engine is the synchronous core the async tier composes:
+    ``serve.server.SolverServer`` puts an admission queue, a batching
+    policy and a plan-pool router in front of the same bucket economics
+    (see docs/serving.md).
     """
 
     def __init__(
@@ -197,6 +243,11 @@ class SolverEngine:
 
     def _solve_batch_impl(self, bs: jax.Array):
         if self.max_batch is None or self.plan.distributed or bs.shape[0] == 0:
+            # one un-split bucket of size k: still a bucket execution, so
+            # it still reports occupancy (full, zero pads) — per-bucket
+            # accounting must not vanish just because no split happened
+            if bs.shape[0]:
+                record_bucket(bs.shape[0], bs.shape[0])
             return self.plan.solve_batched(bs)
         k = bs.shape[0]
         chunks = []
@@ -206,9 +257,7 @@ class SolverEngine:
             pad = self.max_batch - valid
             if pad:  # coalesce the remainder into the SAME compiled bucket
                 chunk = jnp.concatenate([chunk, jnp.zeros((pad, bs.shape[1]), bs.dtype)])
-            _metrics.counter("serve.buckets").inc()
-            _metrics.counter("serve.padded_lanes").inc(pad)
-            _metrics.histogram("serve.batch_occupancy").record(valid / self.max_batch)
+            record_bucket(valid, self.max_batch)
             chunks.append(self.plan.solve_batched(chunk))
         out = jax.tree_util.tree_map(lambda *xs: jnp.concatenate(xs), *chunks)
         return jax.tree_util.tree_map(lambda x: x[:k], out)
@@ -231,16 +280,14 @@ class SolverEngine:
             iters = np.asarray(per_rhs)
             for it in iters:
                 _metrics.histogram("serve.rhs_iterations").record(int(it))
-            # lanes ride until the slowest rhs of their OWN bucket stops:
-            # the difference is pure occupancy waste, the number bucket
-            # routing should shrink. Bucketing mirrors _solve_batch_impl;
-            # distributed batches run per-rhs (no shared stop, no waste).
-            if not self.plan.distributed:
-                step = self.max_batch or len(iters)
-                waste = sum(
-                    int((grp.max() - grp).sum())
-                    for lo in range(0, len(iters), step)
-                    if len(grp := iters[lo : lo + step])
-                )
-                _metrics.counter("serve.wasted_lane_iterations").inc(waste)
+            # waste is accounted per BUCKET (mirroring _solve_batch_impl's
+            # split), not per call: a k=10/max_batch=4 batch reports three
+            # buckets' worth, and an un-split batch (max_batch=None, or a
+            # distributed batch — since mesh-level rhs stacking those also
+            # run as ONE program with a shared worst-case stop) reports
+            # one k-sized bucket.
+            step = len(iters)
+            if self.max_batch is not None and not self.plan.distributed:
+                step = self.max_batch
+            _metrics.counter("serve.wasted_lane_iterations").inc(bucket_waste(iters, step))
         return out

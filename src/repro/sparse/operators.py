@@ -27,7 +27,7 @@ from typing import Any, Callable, Optional, Protocol, Tuple, runtime_checkable
 import jax
 import jax.numpy as jnp
 
-__all__ = ["LinearOperator", "FunctionOperator", "as_operator"]
+__all__ = ["LinearOperator", "FunctionOperator", "CountingOperator", "as_operator"]
 
 
 @runtime_checkable
@@ -84,6 +84,90 @@ class FunctionOperator:
                 "preconditioner object"
             )
         return self.diag
+
+
+class CountingOperator:
+    """Matvec-counting wrapper: serve/benchmark accounting for operator cost.
+
+    Wraps any :class:`LinearOperator` (or dense array / matrix container)
+    and counts applications on the host:
+
+        C = CountingOperator(A)
+        p = repro.plan(C, method="pipecg", M="jacobi")
+        res = p.solve(b)
+        C.applications(res)        # matvecs this solve actually performed
+
+    ``calls`` counts *invocations of* ``matvec`` — in eager code that is
+    the number of operator applications; through a jitted solve each
+    **call site** in the program counts once, at trace time, and never
+    again on warm solves (``trace_calls`` isolates the traced ones — a
+    PIPECG program shows 4: three setup matvecs plus the ONE loop-body
+    site). ``applications(result)`` converts sites into per-solve
+    operator applications: setup sites execute once, the loop site runs
+    ``result.iterations`` times. Registered as a LEAFLESS pytree
+    whose aux data is the wrapper itself: jit-traced solves call
+    ``matvec`` on the original host object (counters survive tracing),
+    the base operator's arrays are embedded as trace constants, and a new
+    wrapper object means a new trace — accounting, not a serving path.
+    """
+
+    def __init__(self, base):
+        self.base = base
+        self.calls = 0                 # total matvec invocations (host)
+        self.trace_calls = 0           # invocations made under a jax trace
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return self.base.shape
+
+    @property
+    def dtype(self):
+        return getattr(self.base, "dtype", jnp.float32)
+
+    def matvec(self, x: jax.Array) -> jax.Array:
+        self.calls += 1
+        if isinstance(x, jax.core.Tracer):
+            self.trace_calls += 1
+        from .spmv import spmv  # routes formats/dense/protocol alike
+
+        return spmv(self.base, x)
+
+    def diagonal(self) -> jax.Array:
+        if not hasattr(self.base, "diagonal"):
+            raise ValueError(
+                f"{type(self.base).__name__} has no diagonal(); use "
+                "M='identity' or an explicit preconditioner"
+            )
+        return self.base.diagonal()
+
+    def reset(self) -> None:
+        self.calls = 0
+        self.trace_calls = 0
+
+    def applications(self, result, loop_sites: int = 1) -> int:
+        """Matvecs one solve through ONE traced program performed.
+
+        Setup call sites (``trace_calls - loop_sites``) execute once per
+        right-hand side; each loop site executes ``iterations`` times
+        (``loop_sites=1`` is the CG family: one SPMV in the pinned loop).
+        ``result`` is a ``SolveResult``; a batched result sums its per-rhs
+        iteration counts and multiplies setup by the batch size. Only
+        meaningful while a single program has been traced — ``reset()``
+        between programs to attribute counts.
+        """
+        import numpy as np
+
+        iters = np.asarray(result.iterations)
+        k = max(iters.size, 1)
+        setup = max(self.trace_calls - loop_sites, 0)
+        return int(setup * k + loop_sites * int(iters.sum()))
+
+
+jax.tree_util.register_pytree_node(
+    CountingOperator,
+    lambda op: ((), op),
+    lambda op, _children: op,
+)
 
 
 def as_operator(A, n: int | None = None, dtype=None, diag=None):

@@ -1,0 +1,437 @@
+"""The async serving tier (``repro.serve``): queue, router, warm start, server.
+
+What these tests pin down:
+
+* **bucket close policy** — full (``max_batch`` reached) vs timeout
+  (``max_wait`` after the FIRST request), each with its own counter;
+* **backpressure** — a full queue raises ``QueueFull`` at ``put`` and
+  counts the rejection; deadlines fail fast with ``DeadlineExceeded``;
+* **router** — decade tolerance bucketing, content-keyed pool routing
+  (miss -> async build -> hit on one entry), LRU eviction that skips
+  pinned entries, build errors published to waiters;
+* **warm start** — the manifest round-trip contract: a rebuilt plan's
+  ``describe()`` and pool routing key are identical, and a warmed
+  replica's first traffic re-traces NOTHING (``trace_count``);
+* **SolverServer** — end-to-end correctness vs direct ``plan.solve``,
+  two-program steady state, honest per-request iteration counts, and
+  graceful drain with zero dropped requests;
+* **CountingOperator** — host-side matvec accounting through the jitted
+  plan path;
+* **engine bucket metrics** — the un-split path (``max_batch=None``)
+  records one k-sized bucket instead of nothing.
+"""
+import json
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+import repro.obs as obs
+from repro.serve import (
+    DeadlineExceeded,
+    PlanPool,
+    QueueFull,
+    RequestQueue,
+    ServerClosed,
+    SolveRequest,
+    SolverServer,
+    load_manifest,
+    pool_key,
+    save_manifest,
+    tolerance_bucket,
+)
+from repro.sparse import CountingOperator, poisson27, spmv
+
+
+@pytest.fixture(autouse=True)
+def _obs_clean():
+    obs.disable()
+    obs.reset_metrics()
+    yield
+    obs.disable()
+    obs.reset_metrics()
+
+
+def _system(grid=5):
+    A = poisson27(grid)
+    xstar = jnp.ones((A.n,)) / jnp.sqrt(A.n)
+    b = spmv(A, xstar)
+    return A, xstar, b
+
+
+def _req(atol=1e-5, **kw):
+    return SolveRequest(b=None, atol=atol, **kw)
+
+
+# ---------------------------------------------------------------------------
+# queue: bucket close policy + backpressure
+# ---------------------------------------------------------------------------
+
+class TestRequestQueue:
+    def test_bucket_closes_on_full(self):
+        obs.enable()
+        q = RequestQueue(max_depth=16)
+        for _ in range(5):
+            q.put(_req())
+        batch = q.next_batch(max_batch=4, max_wait=60.0)
+        assert len(batch) == 4  # closed by size, long before the timeout
+        snap = obs.snapshot()
+        assert snap["serve.queue.closed_full"]["value"] == 1.0
+        assert "serve.queue.closed_timeout" not in snap
+
+    def test_bucket_closes_on_timeout(self):
+        obs.enable()
+        q = RequestQueue(max_depth=16)
+        q.put(_req())
+        q.put(_req())
+        t0 = time.monotonic()
+        batch = q.next_batch(max_batch=8, max_wait=0.05)
+        waited = time.monotonic() - t0
+        assert len(batch) == 2  # partial bucket: the timeout edge closed it
+        assert waited < 5.0  # not the full-bucket wait
+        snap = obs.snapshot()
+        assert snap["serve.queue.closed_timeout"]["value"] == 1.0
+        assert "serve.queue.closed_full" not in snap
+
+    def test_timeout_counts_from_first_request(self):
+        # the clock starts at the FIRST request: a straggler arriving just
+        # before t_close joins the bucket but does not extend the wait
+        q = RequestQueue(max_depth=16)
+        q.put(_req())
+        t0 = time.monotonic()
+        batch = q.next_batch(max_batch=8, max_wait=0.10)
+        assert time.monotonic() - t0 < 1.0
+        assert len(batch) == 1
+
+    def test_backpressure_queue_full(self):
+        obs.enable()
+        q = RequestQueue(max_depth=2)
+        q.put(_req())
+        q.put(_req())
+        with pytest.raises(QueueFull):
+            q.put(_req())
+        assert obs.snapshot()["serve.rejects.queue_full"]["value"] == 1.0
+        assert len(q) == 2  # the rejected request was never admitted
+
+    def test_closed_rejects_but_drains(self):
+        obs.enable()
+        q = RequestQueue(max_depth=8)
+        for _ in range(3):
+            q.put(_req())
+        q.close()
+        with pytest.raises(ServerClosed):
+            q.put(_req())
+        assert obs.snapshot()["serve.rejects.shutdown"]["value"] == 1.0
+        # everything admitted before close still drains...
+        assert len(q.next_batch(max_batch=8, max_wait=0.01)) == 3
+        # ...and only then does the queue report end-of-stream
+        assert q.next_batch(max_batch=8, max_wait=0.01) is None
+
+    def test_expired_deadline_fails_fast(self):
+        obs.enable()
+        q = RequestQueue(max_depth=8)
+        dead = _req(deadline=time.monotonic() - 0.01)
+        live = _req(deadline=time.monotonic() + 60.0)
+        q.put(dead)
+        q.put(live)
+        batch = q.next_batch(max_batch=2, max_wait=0.01)
+        assert batch == [live]
+        with pytest.raises(DeadlineExceeded):
+            dead.future.result(timeout=1.0)
+        assert obs.snapshot()["serve.rejects.deadline"]["value"] == 1.0
+
+    def test_fail_all(self):
+        q = RequestQueue(max_depth=8)
+        reqs = [_req() for _ in range(3)]
+        for r in reqs:
+            q.put(r)
+        boom = RuntimeError("plan build failed")
+        assert q.fail_all(boom) == 3
+        for r in reqs:
+            with pytest.raises(RuntimeError, match="plan build failed"):
+                r.future.result(timeout=1.0)
+
+
+# ---------------------------------------------------------------------------
+# router: tolerance buckets, pool keys, async builds, eviction
+# ---------------------------------------------------------------------------
+
+class TestRouter:
+    def test_tolerance_bucket_decades(self):
+        assert tolerance_bucket(3e-6) == pytest.approx(1e-6)
+        assert tolerance_bucket(9.9e-5) == pytest.approx(1e-5)
+        assert tolerance_bucket(1e-5) == pytest.approx(1e-5)
+        assert tolerance_bucket(0.0) == 0.0
+        assert tolerance_bucket(None) == 0.0
+
+    def test_pool_key_shares_decade_and_splits_method(self):
+        cfg = dict(method="pipecg", engine="jnp", M="jacobi",
+                   atol=3e-6, rtol=0.0, maxiter=100)
+        k1 = pool_key("fp", cfg)
+        k2 = pool_key("fp", {**cfg, "atol": 8e-6})       # same decade
+        k3 = pool_key("fp", {**cfg, "atol": 3e-5})       # different decade
+        k4 = pool_key("fp", {**cfg, "method": "pcg"})
+        assert k1 == k2
+        assert k1 != k3 and k1 != k4
+
+    def test_miss_builds_async_then_hits(self):
+        obs.enable()
+        A, _, b = _system(4)
+        pool = PlanPool(max_plans=4)
+        cfg = dict(method="pipecg", engine="jnp", M="jacobi",
+                   atol=1e-5, rtol=0.0, maxiter=100)
+        entry, created = pool.get_or_create(A, cfg)
+        assert created  # miss: the build is now running on a daemon thread
+        again, created2 = pool.get_or_create(A, cfg)
+        assert again is entry and not created2  # hit lands on the SAME entry
+        plan = entry.wait(timeout=120.0)
+        res = plan.solve(b)
+        assert bool(res.converged)
+        snap = obs.snapshot()
+        assert snap["serve.router.misses"]["value"] == 1.0
+        assert snap["serve.router.hits"]["value"] == 1.0
+
+    def test_build_error_published(self):
+        A, _, _ = _system(4)
+        pool = PlanPool(max_plans=4)
+        entry, _ = pool.get_or_create(
+            A, dict(method="no-such-method", engine="jnp", M="jacobi",
+                    atol=1e-5, rtol=0.0, maxiter=50))
+        with pytest.raises(Exception):
+            entry.wait(timeout=120.0)
+        assert entry.error is not None
+
+    def test_lru_eviction_skips_pinned(self):
+        A, _, _ = _system(4)
+        pool = PlanPool(max_plans=2)
+        cfg = dict(method="pipecg", engine="jnp", M="jacobi",
+                   rtol=0.0, maxiter=100)
+        e1, _ = pool.get_or_create(A, {**cfg, "atol": 1e-4})
+        e2, _ = pool.get_or_create(A, {**cfg, "atol": 1e-5})
+        e1.wait(timeout=120.0)
+        e2.wait(timeout=120.0)
+        with e1.pinned():  # e1 is LRU but in-flight: e2 must go instead
+            e3, _ = pool.get_or_create(A, {**cfg, "atol": 1e-6})
+            keys = [e.key for e in pool.entries()]
+            assert e1.key in keys and e3.key in keys
+            assert e2.key not in keys
+
+    def test_fingerprint_content_based(self):
+        from repro.plan import operator_fingerprint
+
+        A1 = poisson27(4)
+        A2 = poisson27(4)       # distinct object, identical content
+        A3 = poisson27(5)
+        assert A1 is not A2
+        assert operator_fingerprint(A1) == operator_fingerprint(A2)
+        assert operator_fingerprint(A1) != operator_fingerprint(A3)
+
+
+# ---------------------------------------------------------------------------
+# warm start: the manifest round-trip contract
+# ---------------------------------------------------------------------------
+
+class TestWarmStart:
+    def test_roundtrip_describe_and_key_identical(self, tmp_path):
+        A, _, b = _system(4)
+        p = repro.plan(A, method="pipecg", engine="jnp", M="jacobi",
+                       atol=1e-5, maxiter=100)
+        p.solve(b)
+        path = str(tmp_path / "plans.json")
+        manifest = save_manifest(path, [p], serve={"max_batch": 3})
+        assert manifest["plans"][0]["fingerprint"] == \
+            PlanPool().fingerprint(A)
+
+        loaded, serve_cfg = load_manifest(path, warm=True)
+        assert serve_cfg == {"max_batch": 3}
+        (p2, entry), = loaded
+        # identical describe() (sans trace counts)...
+        from repro.serve.warmstart import _describe_stable
+        assert _describe_stable(p2) == entry["describe"]
+        # ...and the identical pool routing key across "processes"
+        assert pool_key(entry["fingerprint"], p2.config()) == \
+            pool_key(entry["fingerprint"], p.config())
+
+    def test_warm_replica_retraces_nothing(self, tmp_path):
+        A, xstar, b = _system(4)
+        p = repro.plan(A, method="pipecg", engine="jnp", M="jacobi",
+                       atol=1e-5, maxiter=100)
+        p.solve(b)
+        path = str(tmp_path / "plans.json")
+        save_manifest(path, [p], serve={"max_batch": 3})
+
+        loaded, _ = load_manifest(path, warm=True, max_batch=3)
+        (p2, _), = loaded
+        warmed = p2.trace_count
+        assert warmed == 2  # single + bucket program, traced at load
+        res = p2.solve(b)                            # first "real" traffic
+        resb = p2.solve_batched(jnp.stack([b, 2.0 * b, -b]))
+        assert p2.trace_count == warmed  # ZERO new traces
+        assert bool(res.converged) and np.asarray(resb.converged).all()
+        np.testing.assert_allclose(np.asarray(res.x), np.asarray(xstar),
+                                   rtol=1e-3, atol=1e-4)
+
+    def test_strict_catches_drifted_spec(self, tmp_path):
+        A, _, b = _system(4)
+        p = repro.plan(A, method="pipecg", engine="jnp", M="jacobi",
+                       atol=1e-5, maxiter=100)
+        path = str(tmp_path / "plans.json")
+        save_manifest(path, [p])
+        doc = json.load(open(path))
+        doc["plans"][0]["operator"]["params"]["n"] = 999  # corrupt the spec
+        json.dump(doc, open(path, "w"))
+        with pytest.raises(ValueError, match="fingerprint"):
+            load_manifest(path, warm=False, strict=True)
+
+    def test_server_from_manifest(self, tmp_path):
+        A, _, b = _system(4)
+        path = str(tmp_path / "plans.json")
+        with SolverServer(max_batch=3, max_wait_ms=2.0, engine="jnp",
+                          atol=1e-5, maxiter=100) as srv:
+            srv.submit(A, b).result(timeout=300.0)
+            srv.save_manifest(path)
+
+        srv2 = SolverServer.from_manifest(path)
+        try:
+            assert srv2.max_batch == 3  # serve config came along
+            plans = srv2.plans()
+            assert len(plans) == 1
+            before = plans[0].trace_count
+            # traffic routes onto the adopted plan (content key!) and
+            # re-traces nothing
+            futs = srv2.submit_many(A, [b, 2.0 * b, -b],
+                                    **plans[0].config())
+            for f in futs:
+                assert bool(f.result(timeout=300.0).converged)
+            assert srv2.plans()[0].trace_count == before
+        finally:
+            srv2.shutdown(drain=True)
+
+
+# ---------------------------------------------------------------------------
+# the server: end-to-end
+# ---------------------------------------------------------------------------
+
+class TestSolverServer:
+    def test_correctness_and_two_programs(self):
+        A, xstar, b = _system(5)
+        with SolverServer(max_batch=3, max_wait_ms=5.0, engine="jnp",
+                          atol=1e-5, maxiter=200) as srv:
+            # prime the single program deterministically, then burst
+            r0 = srv.submit(A, b).result(timeout=300.0)
+            futs = srv.submit_many(A, [2.0 * b, -b, 0.5 * b, 3.0 * b])
+            results = [f.result(timeout=300.0) for f in futs]
+            plans = srv.plans()
+
+        assert len(plans) == 1
+        assert plans[0].trace_count == 2  # single + one padded bucket program
+        np.testing.assert_allclose(np.asarray(r0.x), np.asarray(xstar),
+                                   rtol=1e-3, atol=1e-4)
+        direct = repro.plan(A, method="pipecg", engine="jnp", M="jacobi",
+                            atol=1e-5, maxiter=200)
+        for scale, r in zip([2.0, -1.0, 0.5, 3.0], results):
+            assert r.converged
+            ref = direct.solve(scale * b)
+            np.testing.assert_allclose(np.asarray(r.x), np.asarray(ref.x),
+                                       rtol=1e-4, atol=1e-5)
+            # honest per-request iterations: NaN-tail census, not the
+            # bucket's shared worst case beyond it
+            assert r.iterations == int(ref.iterations)
+            assert 0 < r.bucket_occupancy <= 1.0
+
+    def test_graceful_drain_zero_drops(self):
+        A, _, b = _system(4)
+        srv = SolverServer(max_batch=4, max_wait_ms=2.0, engine="jnp",
+                           atol=1e-5, maxiter=100)
+        futs = srv.submit_many(A, [(1.0 + 0.25 * i) * b for i in range(11)])
+        srv.shutdown(drain=True)  # close admission, serve EVERYTHING queued
+        for f in futs:
+            assert bool(f.result(timeout=300.0).converged)  # zero dropped
+        with pytest.raises(ServerClosed):
+            srv.submit(A, b)
+
+    def test_shutdown_without_drain_fails_pending(self):
+        A, _, b = _system(4)
+        srv = SolverServer(max_batch=4, max_wait_ms=50.0, engine="jnp",
+                           atol=1e-5, maxiter=100)
+        futs = srv.submit_many(A, [b, 2.0 * b])
+        srv.shutdown(drain=False)
+        for f in futs:
+            with pytest.raises(ServerClosed):
+                f.result(timeout=300.0)
+            # (the in-flight bucket may still complete; only queued
+            # requests are guaranteed to fail — accept either outcome)
+            break
+
+    def test_tolerance_decade_shares_plan_tightest_wins(self):
+        A, _, b = _system(4)
+        with SolverServer(max_batch=2, max_wait_ms=20.0, engine="jnp",
+                          maxiter=200) as srv:
+            f1 = srv.submit(A, b, atol=9e-6)
+            f2 = srv.submit(A, 2.0 * b, atol=2e-6)  # same decade, tighter
+            r1, r2 = f1.result(timeout=300.0), f2.result(timeout=300.0)
+            assert len(srv.plans()) == 1  # one pooled plan for the decade
+        # the bucket ran at the tightest member's atol: 9e-6's residual is
+        # at least as small as a direct 9e-6 solve's
+        rdirect = repro.plan(A, method="pipecg", engine="jnp", M="jacobi",
+                             atol=2e-6, maxiter=200).solve(b)
+        assert r1.residual_norm <= float(rdirect.residual_norm) * 1.5 + 1e-12
+        assert r1.converged and r2.converged
+
+
+# ---------------------------------------------------------------------------
+# CountingOperator + engine bucket metrics (the satellite fixes)
+# ---------------------------------------------------------------------------
+
+class TestCountingOperator:
+    def test_counts_through_jitted_plan(self):
+        A, _, b = _system(4)
+        C = CountingOperator(A)
+        p = repro.plan(C, method="pipecg", engine="jnp", M="jacobi",
+                       atol=1e-5, maxiter=100)
+        res = p.solve(b)
+        assert bool(res.converged)
+        # every call SITE counted once at trace time: 3 setup + 1 loop
+        assert C.trace_calls == 4 and C.calls == 4
+        # sites -> per-solve applications: setup once + loop x iterations
+        assert C.applications(res) == 3 + int(res.iterations)
+        first = C.calls
+        p.solve(2.0 * b)  # warm: pinned program, zero new matvec calls
+        assert C.calls == first
+
+    def test_eager_counts(self):
+        A, _, b = _system(4)
+        C = CountingOperator(A)
+        y = C.matvec(b)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(spmv(A, b)),
+                                   rtol=1e-6)
+        assert C.calls == 1 and C.trace_calls == 0
+        C.reset()
+        assert C.calls == 0
+
+
+class TestEngineBucketMetrics:
+    def test_unsplit_path_records_one_bucket(self):
+        from repro.serve.engine import SolverEngine
+
+        obs.enable()
+        A, _, b = _system(4)
+        eng = SolverEngine(A, M="jacobi", method="pipecg", atol=1e-5,
+                           maxiter=100, max_batch=None)
+        eng.solve_batch(jnp.stack([b, 2.0 * b, -b]))
+        snap = obs.snapshot()
+        # pre-fix this path recorded NOTHING: now one k-sized bucket
+        assert snap["serve.buckets"]["value"] == 1.0
+        assert snap["serve.padded_lanes"]["value"] == 0.0
+        occ = snap["serve.batch_occupancy"]
+        assert occ["count"] == 1 and occ["min"] == 1.0
+
+    def test_bucket_waste_helper(self):
+        from repro.serve.engine import bucket_waste
+
+        # two buckets of 2: waste = (5-3) + (7-7) = 2
+        assert bucket_waste([3, 5, 7, 7], 2) == 2
+        assert bucket_waste([4, 4, 4], 3) == 0
+        assert bucket_waste([], 4) == 0

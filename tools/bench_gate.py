@@ -50,7 +50,11 @@ from typing import Dict, Tuple
 STRUCTURAL = ("launches_per_iter", "bytes_per_elem",
               # distributed collective censuses (BENCH_overlap.json): a
               # schedule is a property of program construction, noise-free
-              "reductions_per_iter", "ppermutes_per_iter", "allgathers_per_iter")
+              "reductions_per_iter", "ppermutes_per_iter", "allgathers_per_iter",
+              # serving tier (BENCH_serve.json): XLA programs traced across
+              # the plan pool — a third program per plan means the
+              # two-program steady state regressed
+              "programs_compiled")
 CONVERGENCE_PREFIXES = ("iters_", "iterations")
 TIMING_MARKERS = ("us_per_", "_gbs", "time_", "_us")
 # provenance/config keys: informational, never gated
